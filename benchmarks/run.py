@@ -1,0 +1,55 @@
+"""Benchmark driver: one section per paper table/figure + beyond-paper rows.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Emits ``name,metric,value[,paper_value]`` CSV-ish lines so EXPERIMENTS.md
+tables regenerate mechanically.  The dry-run/roofline sweep is separate
+(repro.launch.dryrun) because it needs the 512-device XLA flag.
+"""
+from __future__ import annotations
+
+import time
+
+
+def _section(title: str):
+    print(f"\n# --- {title} ---")
+
+
+def main() -> None:
+    t_all = time.time()
+
+    _section("Figure 7/8: instantiation time & memory (100 -> 100k hosts)")
+    from benchmarks import fig7_8_instantiation
+
+    fig7_8_instantiation.main()
+
+    _section("Figure 9/10: space- vs time-shared task execution")
+    from benchmarks import fig9_10_scheduling
+
+    fig9_10_scheduling.main()
+
+    _section("Table 1: federated vs non-federated clouds")
+    from benchmarks import table1_federation
+
+    table1_federation.main()
+
+    _section("Campaign throughput (beyond paper: vmapped simulations)")
+    from benchmarks import campaign_throughput
+
+    campaign_throughput.main()
+
+    _section("Serving scheduler (beyond paper: CloudSim-driven batching)")
+    from benchmarks import serving_sched
+
+    serving_sched.main()
+
+    _section("Energy + topology (the paper's future work, implemented)")
+    from benchmarks import energy_topology
+
+    energy_topology.main()
+
+    print(f"\n# total wall time: {time.time() - t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

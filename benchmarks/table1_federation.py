@@ -1,0 +1,45 @@
+"""Paper Table 1: federated vs non-federated turnaround/makespan."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import scenarios, simulate
+
+PAPER = {
+    "with": {"mean_tat": 2221.13, "makespan": 6613.1},
+    "without": {"mean_tat": 4700.1, "makespan": 8405.0},
+}
+
+
+def run() -> dict:
+    out = {}
+    for fed, key in ((True, "with"), (False, "without")):
+        r = jax.jit(simulate)(scenarios.table1_scenario(fed))
+        out[key] = {
+            "mean_tat": float(r.mean_turnaround),
+            "makespan": float(r.makespan),
+            "migrations": int(r.n_migrations),
+            "total_cost": float(r.total_cost),
+        }
+    return out
+
+
+def main():
+    out = run()
+    print("case,mean_tat_s,makespan_s,migrations,paper_tat,paper_makespan")
+    for key in ("with", "without"):
+        o, p = out[key], PAPER[key]
+        print(f"{key},{o['mean_tat']:.1f},{o['makespan']:.1f},"
+              f"{o['migrations']},{p['mean_tat']},{p['makespan']}")
+    tat_cut = 1 - out["with"]["mean_tat"] / out["without"]["mean_tat"]
+    mk_cut = 1 - out["with"]["makespan"] / out["without"]["makespan"]
+    paper_tat_cut = 1 - PAPER["with"]["mean_tat"] / PAPER["without"]["mean_tat"]
+    paper_mk_cut = 1 - PAPER["with"]["makespan"] / PAPER["without"]["makespan"]
+    print(f"reduction,mean_tat,{100 * tat_cut:.1f}%,paper,"
+          f"{100 * paper_tat_cut:.1f}%")
+    print(f"reduction,makespan,{100 * mk_cut:.1f}%,paper,"
+          f"{100 * paper_mk_cut:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

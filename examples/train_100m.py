@@ -1,0 +1,51 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps on
+the synthetic Markov pipeline, with periodic async checkpointing.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300]
+
+(A scaled-down internlm2-family config: 12L x 768 with a 8192 vocab ~= 98M
+params.  On TPU the same driver jits under make_production_mesh(); here it
+runs on CPU, so the default step count keeps wall time reasonable — pass
+--steps 300 for the full demonstration.)
+"""
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.launch.train import run_training
+from repro.models.config import ModelConfig
+
+
+def config_100m() -> ModelConfig:
+    return ModelConfig(
+        name="demo-98m", family="dense",
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, d_head=64,
+        d_ff=2048, vocab=8192, remat=False, dtype="float32",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--global-batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    cfg = config_100m()
+    n_params = cfg.param_count()
+    print(f"[100m] params = {n_params / 1e6:.1f}M, ln(V) = "
+          f"{np.log(cfg.vocab):.3f}")
+    out = run_training(
+        cfg, steps=args.steps, global_batch=args.global_batch,
+        seq_len=args.seq_len, lr=6e-4, ckpt_dir=args.ckpt_dir,
+        ckpt_every=50, log_every=10,
+    )
+    first, last = out["losses"][0], out["final_loss"]
+    print(f"[100m] loss {first:.3f} -> {last:.3f} over {out['steps_run']} steps")
+    assert last < first, "model did not learn"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+from repro.launch.dryrun import run_cell, RESULTS_DIR
+from repro.configs import ARCH_IDS
+from repro.models import ALL_SHAPES
+from repro.models.config import TRAIN_4K, DECODE_32K
+
+os.makedirs(RESULTS_DIR, exist_ok=True)
+
+def save(out, name):
+    json.dump(out, open(os.path.join(RESULTS_DIR, name + ".json"), "w"), indent=2)
+    r = out.get("roofline")
+    if r:
+        print("%s: comp=%.0fms coll=%.0fms resid=%.2fGB bound=%.1f%%" % (
+            name, 1e3*r["compute_s"], 1e3*r["collective_s"],
+            out["memory_model"]["residency_bytes"]/1e9,
+            100*r["roofline_fraction"]), flush=True)
+    else:
+        print(name, "->", out.get("skipped", out.get("error", "?"))[:80], flush=True)
+
+# baselines, both meshes
+for mesh in ("single", "multi"):
+    for arch in ARCH_IDS:
+        for shape in ALL_SHAPES:
+            try:
+                out = run_cell(arch, shape, mesh)
+            except Exception as e:
+                import traceback
+                out = {"arch": arch, "shape": shape.name, "mesh": mesh,
+                       "error": traceback.format_exc()}
+            save(out, f"{arch}__{shape.name}__{mesh}")
+
+# hillclimb variants
+variants = [
+    ("gemma2-27b", TRAIN_4K, dict(microbatches=1, sequence_parallel=True), "opt1_sp_mb1"),
+    ("gemma2-27b", TRAIN_4K, dict(microbatches=1, strategy="fsdp"), "opt2_fsdp_mb1"),
+    ("gemma2-27b", TRAIN_4K, dict(microbatches=1, strategy="fsdp", master_bf16=True), "opt3_fsdp_mb1_bf16"),
+    ("qwen3-moe-235b-a22b", TRAIN_4K, dict(microbatches=1, sequence_parallel=True, master_bf16=True), "opt1_sp_mb1_bf16"),
+    ("qwen3-moe-235b-a22b", TRAIN_4K, dict(microbatches=4, master_bf16=True,
+                                           extra_cfg=dict(remat_policy="save_named")), "opt2_bf16_rematpol"),
+    ("qwen3-32b", DECODE_32K, dict(), "opt1_flashdecode"),
+]
+for arch, shape, kw, tag in variants:
+    try:
+        out = run_cell(arch, shape, "single", tag=tag, **kw)
+    except Exception:
+        import traceback
+        out = {"arch": arch, "shape": shape.name, "error": traceback.format_exc()}
+    save(out, f"{arch}__{shape.name}__single__{tag}")

@@ -1,0 +1,4 @@
+"""repro.analysis — roofline extraction from compiled dry-run artifacts."""
+from repro.analysis import roofline
+
+__all__ = ["roofline"]

@@ -1,0 +1,249 @@
+"""Trip-count-aware HLO static analysis.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, but our step
+functions are scans over layers x microbatches x kv-chunks — undercounting
+flops and (worse) per-layer collectives by 2-3 orders of magnitude.  This
+walker parses the optimized HLO text into its computation graph, extracts
+static trip counts from loop conditions, and accumulates:
+
+  * dot flops            (2 x |out| x |contraction| per dot, batched incl.)
+  * collective bytes     (operand/result sizes per kind, ring-effective)
+  * per-kind collective call counts (trip-weighted)
+
+weighted by the product of enclosing trip counts.  Shapes in the optimized
+module are per-device (SPMD), so totals are per-device per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "token": 0, "opaque": 0,
+}
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?(%?[\w\.\-]+)\s*\(.*->.*\{\s*$")
+_SHAPE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_WHILE = re.compile(r"while\(.*?\), condition=(%?[\w\.\-]+), body=(%?[\w\.\-]+)")
+_KNOWN_TRIPS = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"(?:calls|to_apply)=(%?[\w\.\-]+)")
+_FUSION_CALLS = re.compile(r"fusion\(.*?calls=(%?[\w\.\-]+)", re.S)
+_COLL = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_CONST_S32 = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_DOT = re.compile(r"\bdot\(")
+_DEF = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\w+\[[\d,]*\])")
+_ARGS_OF = re.compile(r"\((%[\w\.\-]+(?:,\s*%[\w\.\-]+)*)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _dims(dims_str: str) -> list[int]:
+    return [int(d) for d in dims_str.split(",") if d]
+
+
+def _nelems(dims_str: str) -> int:
+    n = 1
+    for d in _dims(dims_str):
+        n *= d
+    return n
+
+
+def _shape_bytes(m: re.Match) -> int:
+    dt, dims = m.groups()
+    return _DTYPE_BYTES.get(dt, 4) * _nelems(dims)
+
+
+@dataclasses.dataclass
+class WalkTotals:
+    dot_flops: float = 0.0
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+    coll_raw: dict = dataclasses.field(default_factory=dict)
+    coll_eff_by_kind: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def coll_effective(self) -> float:
+        return sum(self.coll_eff_by_kind.values())
+
+    def add(self, other: "WalkTotals", mult: float = 1.0):
+        self.dot_flops += other.dot_flops * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * mult
+        for k, v in other.coll_raw.items():
+            self.coll_raw[k] = self.coll_raw.get(k, 0) + v * mult
+        for k, v in other.coll_eff_by_kind.items():
+            self.coll_eff_by_kind[k] = (
+                self.coll_eff_by_kind.get(k, 0) + v * mult
+            )
+
+
+class HloWalker:
+    def __init__(self, hlo_text: str, default_group: int = 256):
+        self.default_group = default_group
+        self.comps: dict[str, list[str]] = {}
+        self.entry: str | None = None
+        cur: list[str] | None = None
+        name = None
+        self.defs: dict[str, dict[str, str]] = {}
+        cur_defs: dict[str, str] | None = None
+        for line in hlo_text.splitlines():
+            m = _COMP_HEADER.match(line)
+            if m and "{" in line:
+                name = m.group(2).lstrip("%")
+                cur = []
+                cur_defs = {}
+                self.comps[name] = cur
+                self.defs[name] = cur_defs
+                if m.group(1):
+                    self.entry = name
+                continue
+            if line.startswith("}"):
+                cur = None
+                cur_defs = None
+                continue
+            if cur is not None:
+                cur.append(line)
+                dm = _DEF.match(line)
+                if dm:
+                    cur_defs[dm.group(1)] = dm.group(2)
+        if self.entry is None and self.comps:
+            # fall back: computation named like main
+            for k in self.comps:
+                if "main" in k:
+                    self.entry = k
+                    break
+
+    # ------------------------------------------------------------------
+    def trip_count(self, cond_name: str) -> int:
+        """Static trip count heuristic: max s32 constant in the condition."""
+        lines = self.comps.get(cond_name.lstrip("%"), [])
+        best = 1
+        for ln in lines:
+            for c in _CONST_S32.findall(ln):
+                best = max(best, int(c))
+            # constants may live inside a fused compare computation
+            fm = _CALLS.search(ln)
+            if fm and "fusion" in ln:
+                for ln2 in self.comps.get(fm.group(1).lstrip("%"), []):
+                    for c in _CONST_S32.findall(ln2):
+                        best = max(best, int(c))
+        return best
+
+    def _operand_shapes(self, comp: str, line: str) -> list[str]:
+        """Operand type strings of the op call on ``line`` (by name lookup)."""
+        i = line.find("(", line.find("=") + 1)
+        if i < 0:
+            return []
+        depth, buf = 1, ""
+        for ch in line[i + 1:]:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            buf += ch
+        defs = self.defs.get(comp, {})
+        out = []
+        for tok in buf.split(","):
+            tok = tok.strip()
+            # inline-typed operand (unscheduled HLO): f32[8,16] %x
+            ms = _SHAPE.match(tok)
+            if ms:
+                out.append(ms.group(0))
+                continue
+            if tok.startswith("%") and tok.lstrip("%") in defs:
+                out.append(defs[tok.lstrip("%")])
+        return out
+
+    def _dot_flops(self, comp: str, line: str) -> float:
+        rm = _SHAPE.search(line.split("=", 1)[1] if "=" in line else line)
+        if not rm:
+            return 0.0
+        out_elems = _nelems(rm.group(2))
+        ops = self._operand_shapes(comp, line)
+        if not ops:
+            return 0.0
+        lhs = _SHAPE.match(ops[0])
+        lhs_dims = _dims(lhs.group(2)) if lhs else []
+        cm = _CONTRACT.search(line)
+        contract = 1
+        if cm:
+            for idx in _dims(cm.group(1)):
+                if idx < len(lhs_dims):
+                    contract *= lhs_dims[idx]
+        return 2.0 * out_elems * contract
+
+    def _coll(self, comp: str, line: str, kind: str, tot: WalkTotals):
+        lhs, _, rhs = line.partition("=")
+        head = rhs.split("(")[0]
+        res_b = sum(_shape_bytes(s) for s in _SHAPE.finditer(head))
+        ops = self._operand_shapes(comp, line)
+        op_b = 0
+        for o in ops:
+            m = _SHAPE.match(o)
+            if m:
+                op_b += _shape_bytes(m)
+        if op_b == 0:
+            op_b = res_b  # same-shape fallback (all-reduce/permute)
+        gm = _GROUPS.search(line)
+        if gm:
+            ids = [x for x in gm.group(1).split(",") if x.strip()]
+            n = max(len(ids), 1)
+        else:
+            gm = _GROUPS_IOTA.search(line)
+            n = int(gm.group(2)) if gm else self.default_group
+        ring = (n - 1) / max(n, 1)
+        tot.coll_counts[kind] = tot.coll_counts.get(kind, 0) + 1
+        tot.coll_raw[kind] = tot.coll_raw.get(kind, 0) + op_b
+        if kind == "all-reduce":
+            eff = 2 * ring * op_b
+        elif kind == "all-gather":
+            eff = ring * res_b
+        elif kind in ("reduce-scatter", "all-to-all"):
+            eff = ring * op_b
+        else:
+            eff = op_b
+        tot.coll_eff_by_kind[kind] = tot.coll_eff_by_kind.get(kind, 0) + eff
+
+    # ------------------------------------------------------------------
+    def totals_for(self, comp: str, _memo: dict | None = None) -> WalkTotals:
+        memo = _memo if _memo is not None else {}
+        comp = comp.lstrip("%")
+        if comp in memo:
+            return memo[comp]
+        tot = WalkTotals()
+        memo[comp] = tot  # pre-insert (cycles shouldn't occur)
+        for line in self.comps.get(comp, []):
+            wm = _WHILE.search(line)
+            if wm:
+                cond, body = wm.groups()
+                km = _KNOWN_TRIPS.search(line)
+                trips = int(km.group(1)) if km else self.trip_count(cond)
+                tot.add(self.totals_for(body, memo), trips)
+                tot.add(self.totals_for(cond, memo), trips)
+                continue
+            cm = _COLL.search(line)
+            if cm:
+                self._coll(comp, line, cm.group(1), tot)
+                continue
+            if _DOT.search(line):
+                tot.dot_flops += self._dot_flops(comp, line)
+            for sub in _CALLS.findall(line):
+                tot.add(self.totals_for(sub, memo), 1.0)
+        return tot
+
+    def walk(self) -> WalkTotals:
+        if not self.entry:
+            return WalkTotals()
+        return self.totals_for(self.entry, {})
+
+
+def analyze_hlo(hlo_text: str, default_group: int = 256) -> WalkTotals:
+    return HloWalker(hlo_text, default_group).walk()

@@ -1,0 +1,4 @@
+"""repro.ckpt — atomic sharded checkpointing with async save + resharding restore."""
+from repro.ckpt.checkpoint import AsyncSaver, latest_step, restore, save
+
+__all__ = ["AsyncSaver", "latest_step", "restore", "save"]

@@ -1,0 +1,146 @@
+"""Sharded, atomic, async checkpointing with resharding restore.
+
+This is the framework's federation "VM migration" mechanism (DESIGN.md §2):
+a job moves between pods/meshes by checkpoint + restore-with-resharding, the
+tensorized analogue of CloudSim's VM image transfer.
+
+Layout:   <dir>/step_<n>/arrays.npz  + manifest.json  (atomic via tmp+rename)
+Async:    ``save_async`` snapshots to host memory synchronously (so training
+          may mutate buffers) and writes on a background thread.
+Reshard:  ``restore(..., shardings=...)`` device_puts every leaf to the new
+          mesh's NamedSharding — restoring a 256-chip checkpoint onto a
+          shrunken (elastic) mesh is the same call with the new mesh.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+            for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_like(template: Any, flat: dict[str, np.ndarray]) -> Any:
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths_leaves:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+            for p in path
+        )
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs {leaf.shape}"
+            )
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: dict | None = None) -> str:
+    """Synchronous atomic save. Returns the final step directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        manifest = {
+            "step": step,
+            "n_arrays": len(flat),
+            "bytes": int(sum(a.nbytes for a in flat.values())),
+            **(extra or {}),
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                     # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+class AsyncSaver:
+    """Snapshot-now, write-later checkpointing (one in flight at a time)."""
+
+    def __init__(self):
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def save(self, ckpt_dir: str, step: int, tree: Any,
+             extra: dict | None = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)   # synchronous snapshot
+
+        def _write():
+            try:
+                save(ckpt_dir, step, host_tree, extra)
+            except BaseException as e:               # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and os.path.isfile(
+            os.path.join(ckpt_dir, d, "manifest.json")
+        )
+    ]
+    return max(steps) if steps else None
+
+
+def restore(
+    ckpt_dir: str,
+    template: Any,
+    step: int | None = None,
+    shardings: Any = None,
+) -> tuple[Any, int]:
+    """Load a checkpoint; optionally device_put to new (resharded) layout."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "arrays.npz")
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    tree = _unflatten_like(template, flat)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), tree, shardings
+        )
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree, step

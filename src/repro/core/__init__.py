@@ -1,0 +1,33 @@
+"""repro.core — the paper's contribution: a tensorized CloudSim.
+
+Discrete-event simulation of virtualized datacenters (Datacenter -> Host ->
+VM -> Cloudlet) with two-level space/time-shared scheduling, FCFS/best-fit VM
+provisioning, federation with sensor-driven migration, and market accounting
+— as one pure, jittable, vmappable JAX program (see DESIGN.md).
+"""
+from repro.core.entities import (
+    INF,
+    SPACE_SHARED,
+    TIME_SHARED,
+    Cloudlets,
+    Hosts,
+    Market,
+    Policy,
+    Scenario,
+    SimResult,
+    SimState,
+    VMRequests,
+    finished_mask,
+)
+from repro.core.engine import init_state, simulate, simulate_trace
+from repro.core.campaign import run_campaign, run_campaign_sharded, stack_scenarios
+from repro.core import energy, policies, provision, scenarios, segments
+
+__all__ = [
+    "INF", "SPACE_SHARED", "TIME_SHARED",
+    "Cloudlets", "Hosts", "Market", "Policy", "Scenario",
+    "SimResult", "SimState", "VMRequests", "finished_mask",
+    "init_state", "simulate", "simulate_trace",
+    "run_campaign", "run_campaign_sharded", "stack_scenarios",
+    "energy", "policies", "provision", "scenarios", "segments",
+]

@@ -1,0 +1,60 @@
+"""Simulation campaigns: vmap x shard_map over whole simulations.
+
+What cloud researchers actually run with CloudSim is not one simulation but
+*sweeps* — policy x seed x workload grids.  Because the engine is a pure
+function with traced policy/workload values and static shapes, a campaign is
+``vmap(simulate)``; on a mesh it becomes ``shard_map`` over the data axis so a
+256-chip pod evaluates 256+ federated-cloud scenarios concurrently.  This is
+the paper's "repeatable, controllable, free-of-cost" experimentation scaled
+three orders of magnitude (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import simulate
+from repro.core.entities import Scenario, SimResult
+
+
+def stack_scenarios(scenarios: list[Scenario]) -> Scenario:
+    """Stack same-shape scenarios along a new leading campaign axis."""
+    if not scenarios:
+        raise ValueError("empty campaign")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *scenarios)
+
+
+@jax.jit
+def run_campaign(batched: Scenario) -> SimResult:
+    """Run a stacked campaign on the local device."""
+    return jax.vmap(simulate)(batched)
+
+
+def run_campaign_sharded(batched: Scenario, mesh, axis: str = "data") -> SimResult:
+    """Shard the campaign's leading axis across ``mesh[axis]``.
+
+    Each device runs its slice of scenarios entirely locally; there is no
+    cross-device communication inside a simulation (simulations are
+    embarrassingly parallel), so the collective term of this workload's
+    roofline is exactly zero — see EXPERIMENTS.md §Roofline (campaign row).
+    """
+    pspec = jax.sharding.PartitionSpec(axis)
+    sharding = jax.sharding.NamedSharding(mesh, pspec)
+
+    @partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(pspec,),
+        out_specs=pspec,
+        # while-loop carries mix varying (per-sim state) and unvarying
+        # (scalars broadcast inside the loop) types; correctness is per-shard
+        # independence, which vmap(simulate) guarantees
+        check_vma=False,
+    )
+    def _run(shard: Scenario) -> SimResult:
+        return jax.vmap(simulate)(shard)
+
+    batched = jax.device_put(batched, sharding)
+    return jax.jit(_run)(batched)

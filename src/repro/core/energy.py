@@ -1,0 +1,99 @@
+"""Energy and network-topology models — the paper's stated future work,
+implemented (§6: "power consumption, heat dissipation", "BRITE topology").
+
+Power model (linear-in-utilization, the standard DVFS-era datacenter model):
+    P(host) = P_idle + (P_peak - P_idle) * utilization
+integrated over the piecewise-constant event intervals the engine already
+produces, so per-DC energy falls out of the same sweep that advances work.
+
+Topology model: an inter-DC latency/bandwidth matrix (BRITE-style edge
+parameters without the generator) replacing the paper's single scalar
+inter-DC link; migration delay and federated placement cost become
+pair-dependent, enabling locality-aware coordinator policies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import Array
+
+from repro.core import policies
+from repro.core.entities import Scenario, SimState
+from repro.core.pytree import pytree_dataclass
+
+
+@pytree_dataclass
+class PowerModel:
+    """Per-DC host power parameters, [D] each."""
+    watts_idle: Array    # drawn whenever a host is powered
+    watts_peak: Array    # at 100% core-MIPS utilization
+
+    @staticmethod
+    def uniform(n_dc: int, idle: float = 93.0, peak: float = 135.0):
+        # defaults: SPECpower-ish numbers for a 2009-era 1U server
+        return PowerModel(
+            watts_idle=jnp.full((n_dc,), idle, jnp.float32),
+            watts_peak=jnp.full((n_dc,), peak, jnp.float32),
+        )
+
+
+@pytree_dataclass
+class Topology:
+    """Inter-DC link parameters, [D, D] each (diagonal = intra-DC)."""
+    latency_s: Array
+    bw_mbps: Array
+
+    @staticmethod
+    def uniform(n_dc: int, latency_s: float = 0.05, bw_mbps: float = 100.0):
+        lat = jnp.full((n_dc, n_dc), latency_s, jnp.float32)
+        lat = lat * (1 - jnp.eye(n_dc))
+        bw = jnp.full((n_dc, n_dc), bw_mbps, jnp.float32)
+        return Topology(latency_s=lat, bw_mbps=bw)
+
+    @staticmethod
+    def from_coordinates(coords_km: np.ndarray, bw_mbps: float = 100.0):
+        """BRITE-flavoured: latency ~ great-circle distance / 0.6c."""
+        d = np.linalg.norm(
+            coords_km[:, None, :] - coords_km[None, :, :], axis=-1
+        )
+        lat = (d * 1e3 / (0.6 * 3e8)).astype(np.float32)
+        n = coords_km.shape[0]
+        return Topology(
+            latency_s=jnp.asarray(lat),
+            bw_mbps=jnp.full((n, n), bw_mbps, jnp.float32),
+        )
+
+
+def power_draw(scn: Scenario, state: SimState) -> Array:
+    """[D] instantaneous watts given the current allocation.
+
+    Utilization per host = granted MIPS / capacity; idle power charged for
+    every existing host (no power-gating model — matches the paper's framing
+    of energy as an always-on datacenter cost).
+    """
+    vm_mips = policies.host_level_mips(scn, state)            # [V]
+    D, H = scn.hosts.cores.shape
+    seg = jnp.where(
+        state.vm_placed & scn.vms.exists,
+        state.vm_dc * H + state.vm_host,
+        D * H,
+    )
+    granted = jnp.zeros((D * H + 1,), jnp.float32).at[
+        jnp.clip(seg, 0, D * H)
+    ].add(vm_mips)[:-1].reshape(D, H)
+    cap = scn.hosts.cores.astype(jnp.float32) * scn.hosts.mips
+    util = jnp.where(cap > 0, jnp.clip(granted / jnp.maximum(cap, 1e-9), 0, 1), 0.0)
+    pm: PowerModel = scn.power            # type: ignore[attr-defined]
+    watts = jnp.where(
+        scn.hosts.exists,
+        pm.watts_idle[:, None] + (pm.watts_peak - pm.watts_idle)[:, None] * util,
+        0.0,
+    )
+    return jnp.sum(watts, axis=1)
+
+
+def migration_delay_matrix(scn: Scenario, image_mb: Array) -> Array:
+    """[D, D] seconds to move a VM image between DC pairs under the topology."""
+    topo: Topology = scn.topology         # type: ignore[attr-defined]
+    return topo.latency_s + image_mb / jnp.maximum(topo.bw_mbps, 1e-6)

@@ -1,0 +1,206 @@
+"""CloudSim entities as struct-of-arrays pytrees.
+
+Paper mapping (§3.1, §4):
+
+===============  =============================================================
+CloudSim class   Here
+===============  =============================================================
+Datacenter       the leading axis ``d`` of every ``[D, H]`` host array
+Host             one column of the ``Hosts`` arrays
+VirtualMachine   one row of ``VMRequests`` + per-VM state in ``SimState``
+Cloudlet         one row of ``Cloudlets`` + per-cloudlet state in ``SimState``
+DatacenterBroker the arrival schedule baked into ``request_t`` / ``submit_t``
+SANStorage       ``input_mb``/``output_mb`` transfer latency + bandwidth cost
+CloudCoordinator ``sensed_load`` + the federation placement rule (provision.py)
+Sensor           the periodic ``sensed_load`` refresh (engine.py tick)
+CIS registry     implicit: placement searches the global ``[D, H]`` host table
+===============  =============================================================
+
+All sizes (D datacenters, H hosts/DC, V VMs, C cloudlets) are static shapes;
+all *values* — including the policy selectors — are traced, so one compiled
+engine serves an entire campaign (policy x seed x workload sweep) via vmap.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.pytree import pytree_dataclass
+
+# Scheduling policies (paper §3.2, Figure 4). Traced int32 values.
+SPACE_SHARED = 0
+TIME_SHARED = 1
+
+# A time/MI that behaves as "never/unreachable".
+INF = jnp.float32(3.0e38)
+
+
+@pytree_dataclass
+class Hosts:
+    """Physical machines, ``[D, H]`` per field (paper §3.1 ``Host``)."""
+
+    cores: Array        # [D,H] i32  processing elements per host
+    mips: Array         # [D,H] f32  MIPS per core
+    ram_mb: Array       # [D,H] f32
+    storage_mb: Array   # [D,H] f32
+    bw_mbps: Array      # [D,H] f32
+    exists: Array       # [D,H] bool (ragged datacenters are masked, not padded out)
+
+    @property
+    def n_dc(self) -> int:
+        return self.cores.shape[0]
+
+    @property
+    def n_hosts(self) -> int:
+        return self.cores.shape[1]
+
+
+@pytree_dataclass
+class VMRequests:
+    """VM creation requests, ``[V]`` per field (paper §4 ``VirtualMachine``)."""
+
+    dc: Array          # [V] i32  origin datacenter (the broker submits here)
+    cores: Array       # [V] i32  required processing elements
+    mips: Array        # [V] f32  required MIPS per core
+    ram_mb: Array      # [V] f32
+    storage_mb: Array  # [V] f32
+    bw_mbps: Array     # [V] f32
+    request_t: Array   # [V] f32  when the broker asks for the VM
+    image_mb: Array    # [V] f32  VM image size — migration transfer volume
+    exists: Array      # [V] bool
+
+    @property
+    def n_vms(self) -> int:
+        return self.dc.shape[0]
+
+
+@pytree_dataclass
+class Cloudlets:
+    """Application task units, ``[C]`` per field (paper §4 ``Cloudlet``).
+
+    ``length_mi`` is per-core million-instructions (GridSim convention); a
+    cloudlet needing ``cores`` PEs advances on each of them at its share rate.
+    Rows must be ordered by ``submit_t`` (ties by row) — FCFS below is row
+    order, exactly CloudSim's arrival-ordered queues.
+    """
+
+    vm: Array         # [C] i32  target VM
+    length_mi: Array  # [C] f32
+    cores: Array      # [C] i32
+    submit_t: Array   # [C] f32
+    input_mb: Array   # [C] f32  staged in before execution (SAN transfer)
+    output_mb: Array  # [C] f32  staged out at completion
+    exists: Array     # [C] bool
+
+    @property
+    def n_cloudlets(self) -> int:
+        return self.vm.shape[0]
+
+
+@pytree_dataclass
+class Market:
+    """Per-datacenter prices (paper §3.3), ``[D]`` per field."""
+
+    cost_per_cpu_sec: Array     # charged while a cloudlet executes
+    cost_per_ram_mb: Array      # one-time, at VM creation (paper: "incur during
+    cost_per_storage_mb: Array  # virtual machine creation")
+    cost_per_bw_mb: Array       # per MB transferred (cloudlet IO + migration)
+
+
+@pytree_dataclass
+class Policy:
+    """All policy selectors, traced so campaigns can sweep them."""
+
+    host_policy: Array        # scalar i32: SPACE_SHARED | TIME_SHARED (VMM level)
+    vm_policy: Array          # scalar i32: cloudlet scheduler inside each VM
+    federation: Array         # scalar bool: CloudCoordinator migration on/off
+    core_reserving: Array     # scalar bool: provisioner also reserves PEs
+    best_fit: Array           # scalar bool: best-fit (by leftover RAM) vs first-fit
+    sensor_interval: Array    # scalar f32: Sensor refresh period (sim seconds)
+    migration_fixed_s: Array  # scalar f32: fixed VM re-creation latency
+    interdc_bw_mbps: Array    # scalar f32: inter-datacenter link for migration
+    horizon: Array            # scalar f32: simulation end time
+
+
+@pytree_dataclass(static=("max_steps", "sweep_impl"))
+class Scenario:
+    """A complete experiment: infrastructure + workload + policy + prices.
+
+    ``power`` and ``topology`` (core/energy.py) are optional: the paper's
+    stated future work — energy accounting and BRITE-style inter-DC links —
+    activate when provided and change nothing when None.
+    """
+
+    hosts: Hosts
+    vms: VMRequests
+    cloudlets: Cloudlets
+    market: Market
+    policy: Policy
+    power: object = None        # energy.PowerModel | None
+    topology: object = None     # energy.Topology | None
+    max_steps: int = 0          # 0 -> derived bound (see engine.default_max_steps)
+    sweep_impl: str = "jnp"     # "jnp" | "pallas" — advance-sweep implementation
+
+
+@pytree_dataclass
+class SimState:
+    """Everything the event loop carries (one pytree through while_loop)."""
+
+    t: Array            # scalar f32 simulation clock
+    step: Array         # scalar i32 event-batch counter
+    # --- VM lifecycle ---
+    vm_host: Array       # [V] i32 host index within vm_dc, -1 if unplaced
+    vm_dc: Array         # [V] i32 current datacenter (!= origin after migration)
+    vm_placed: Array     # [V] bool
+    vm_failed: Array     # [V] bool (terminal: creation rejected everywhere)
+    vm_avail_t: Array    # [V] f32 creation/migration completes at this time
+    vm_released: Array   # [V] bool resources returned after all work done
+    vm_migrations: Array # [V] i32
+    # --- host free capacity (provisioner view) ---
+    free_ram: Array      # [D,H] f32
+    free_storage: Array  # [D,H] f32
+    free_bw: Array       # [D,H] f32
+    free_cores: Array    # [D,H] f32 (only enforced when core_reserving)
+    # --- cloudlet execution ---
+    rem_mi: Array        # [C] f32 remaining million-instructions (per core)
+    started: Array       # [C] bool
+    start_t: Array       # [C] f32 (INF until started)
+    finish_t: Array      # [C] f32 (INF until finished)
+    cpu_time: Array      # [C] f32 accumulated executing seconds
+    # --- federation ---
+    sensed_load: Array   # [D] f32 last Sensor reading per DC
+    last_tick: Array     # scalar f32
+    # --- market accounting (per DC) ---
+    cpu_cost: Array      # [D] f32
+    ram_cost: Array      # [D] f32
+    storage_cost: Array  # [D] f32
+    bw_cost: Array       # [D] f32
+    energy_j: Array      # [D] f32 (0 unless Scenario.power is set)
+
+
+@pytree_dataclass
+class SimResult:
+    """Derived outcome of one simulation (what the paper's tables report)."""
+
+    finish_t: Array      # [C]
+    start_t: Array       # [C]
+    turnaround: Array    # [C] finish - submit (INF for never-finished)
+    makespan: Array      # scalar: max finish over finished cloudlets
+    mean_turnaround: Array  # scalar over finished cloudlets
+    n_finished: Array    # scalar i32
+    n_events: Array      # scalar i32 event batches processed
+    n_migrations: Array  # scalar i32
+    vm_placed: Array     # [V] bool
+    vm_dc: Array         # [V] i32 final datacenter
+    vm_failed: Array     # [V] bool
+    cpu_cost: Array      # [D]
+    ram_cost: Array      # [D]
+    storage_cost: Array  # [D]
+    bw_cost: Array       # [D]
+    energy_j: Array      # [D]
+    total_cost: Array    # scalar
+    end_t: Array         # scalar: clock when the loop exited
+
+
+def finished_mask(res: SimResult) -> Array:
+    return jnp.isfinite(res.finish_t) & (res.finish_t < INF / 2)

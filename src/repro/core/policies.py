@@ -1,0 +1,137 @@
+"""Two-level space/time-shared scheduling (paper §3.2, Figure 4).
+
+CloudSim schedules at two levels, each independently space- or time-shared:
+
+* **host -> VM** (``VMMAllocationPolicy``): how a host's cores are granted to
+  the VMs placed on it.
+* **VM -> cloudlet** (``VMScheduling``): how a VM's granted capacity is
+  divided among its task units.
+
+Both levels reduce to one statement: *given the entity set, produce a MIPS
+rate vector*.  Rates are piecewise-constant between events, so the engine
+advances all work with ``rem -= rate * dt`` — this function pair IS the
+paper's ``updateVMsProcessing()``/``updateGridletsProcessing()`` sweep,
+re-derived as dataflow.
+
+Space-shared = FCFS core occupancy (exclusive, queue otherwise) — Figure 4a/c.
+Time-shared  = proportional share of capacity, capped at demand — Figure 4b/d.
+
+Both variants are always computed and selected with ``where`` on the traced
+policy flag, so a single compilation serves all four Figure-4 combinations
+and campaigns may vmap over policies.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.entities import INF, TIME_SHARED, Scenario, SimState
+from repro.core import segments
+
+
+def cloudlet_ready(scn: Scenario, state: SimState) -> Array:
+    """[C] bool — submitted and staged-in (SANStorage input transfer done)."""
+    bw = jnp.maximum(scn.vms.bw_mbps[scn.cloudlets.vm], 1e-6)
+    stage_in = jnp.where(
+        scn.cloudlets.input_mb > 0, scn.cloudlets.input_mb / bw, 0.0
+    )
+    return (state.t >= scn.cloudlets.submit_t + stage_in) & scn.cloudlets.exists
+
+
+def cloudlet_finished(state: SimState) -> Array:
+    return state.finish_t < INF / 2
+
+
+def vm_done(scn: Scenario, state: SimState) -> Array:
+    """[V] bool — VM has work assigned and all of it has finished.
+
+    A "done" VM releases its cores (CloudSim destroys VMs whose workload
+    completed) — this is what lets Figure 4a's VM2 start after VM1 drains.
+    VMs with no cloudlets idle forever (broker never destroys them here).
+    """
+    V = scn.vms.n_vms
+    cl_fin = cloudlet_finished(state) | ~scn.cloudlets.exists
+    seg = jnp.where(scn.cloudlets.exists, scn.cloudlets.vm, V)
+    all_fin = segments.segment_all(cl_fin, seg, V)
+    has_work = segments.segment_sum(
+        scn.cloudlets.exists.astype(jnp.float32), seg, V
+    ) > 0
+    return has_work & all_fin
+
+
+def host_level_mips(scn: Scenario, state: SimState) -> Array:
+    """[V] f32 — total MIPS each VM is granted by its host right now."""
+    hosts, vms = scn.hosts, scn.vms
+    D, H = hosts.cores.shape
+    n_seg = D * H
+
+    done = vm_done(scn, state)
+    # Occupying: holds cores at its host (even while the image is migrating —
+    # the slot is reserved from placement). Usable: may actually execute.
+    occupying = state.vm_placed & ~done & vms.exists
+    usable = occupying & (state.t >= state.vm_avail_t)
+
+    seg = jnp.where(occupying, state.vm_dc * H + state.vm_host, n_seg)
+    host_cores_v = hosts.cores[state.vm_dc, state.vm_host].astype(jnp.float32)
+    host_mips_v = hosts.mips[state.vm_dc, state.vm_host]
+    vm_cores_f = vms.cores.astype(jnp.float32)
+
+    # --- space-shared (Fig 4a): FCFS exclusive core grants ---
+    demand_cores = jnp.where(occupying, vm_cores_f, 0.0)
+    prefix = segments.segment_prefix_sum(demand_cores, seg, n_seg)
+    fits = prefix + vm_cores_f <= host_cores_v + 1e-6
+    percore = jnp.minimum(vms.mips, host_mips_v)
+    space = jnp.where(usable & fits, vm_cores_f * percore, 0.0)
+
+    # --- time-shared (Fig 4c): proportional share of host capacity ---
+    demand_mips = jnp.where(occupying, vm_cores_f * vms.mips, 0.0)
+    total = segments.segment_sum(demand_mips, seg, n_seg)
+    cap = (hosts.cores.astype(jnp.float32) * hosts.mips).reshape(-1)
+    seg_safe = jnp.clip(seg, 0, n_seg - 1)
+    total_v = total[seg_safe]
+    scale = jnp.where(
+        total_v > 0, jnp.minimum(1.0, cap[seg_safe] / jnp.maximum(total_v, 1e-9)), 0.0
+    )
+    time = jnp.where(usable, vm_cores_f * vms.mips * scale, 0.0)
+
+    return jnp.where(scn.policy.host_policy == TIME_SHARED, time, space)
+
+
+def cloudlet_rates(scn: Scenario, state: SimState) -> tuple[Array, Array]:
+    """([C] MIPS rate per cloudlet, [V] granted VM MIPS).
+
+    The per-cloudlet rate is *per required core* x cores, i.e. a 2-core
+    cloudlet of length L finishes after L/(rate/cores) seconds of per-core
+    progress; the engine tracks per-core remaining MI so dt = rem / (rate/cores).
+    To keep the engine uniform we return the rate already normalized to
+    per-core progress MIPS: rem_mi decreases at ``rate`` MI/s.
+    """
+    cls, vms = scn.cloudlets, scn.vms
+    V = vms.n_vms
+
+    vm_mips = host_level_mips(scn, state)
+
+    ready = cloudlet_ready(scn, state)
+    fin = cloudlet_finished(state)
+    occ = ready & ~fin & scn.cloudlets.exists
+    seg = jnp.where(occ, cls.vm, V)
+    cl_cores_f = cls.cores.astype(jnp.float32)
+    vm_cores_f = jnp.maximum(vms.cores.astype(jnp.float32), 1.0)
+
+    percore_capacity = vm_mips / vm_cores_f              # [V] MIPS per granted core
+
+    # --- space-shared inside the VM (Fig 4a/b upper): FCFS core occupancy ---
+    prefix = segments.segment_prefix_sum(jnp.where(occ, cl_cores_f, 0.0), seg, V)
+    fits = prefix + cl_cores_f <= vms.cores[cls.vm].astype(jnp.float32) + 1e-6
+    space = jnp.where(occ & fits, percore_capacity[cls.vm], 0.0)
+
+    # --- time-shared inside the VM (Fig 4b/d): equal per-core share ---
+    total_demand = segments.segment_sum(jnp.where(occ, cl_cores_f, 0.0), seg, V)
+    denom = jnp.maximum(total_demand, vms.cores.astype(jnp.float32))
+    share = vm_mips / jnp.maximum(denom, 1e-9)           # per demanded core
+    time = jnp.where(occ, share[cls.vm], 0.0)
+
+    rate = jnp.where(scn.policy.vm_policy == TIME_SHARED, time, space)
+    # A cloudlet only runs while its VM is granted capacity.
+    rate = jnp.where(vm_mips[cls.vm] > 0, rate, 0.0)
+    return rate, vm_mips

@@ -1,0 +1,184 @@
+"""VM provisioning + federated placement (paper §4 ``VMProvisioner``,
+``BWProvisioner``/``MemoryProvisioner`` feasibility, §2.3/§5 federation).
+
+``SimpleVMProvisioner`` semantics: VMs are considered in request order and
+allocated to the first host that satisfies memory/storage/bandwidth (and,
+optionally, core) requirements — "Hosts are considered for mapping in a
+sequential order".  Sequential resource dependence makes this a ``lax.scan``
+over VM rows carrying the free-capacity arrays.
+
+Federation (the CloudCoordinator rule evaluated in the paper's Table 1):
+a VM is placed in its origin datacenter if ANY host there fits; otherwise,
+iff federation is enabled, it is migrated to the feasible peer datacenter
+with the lowest *sensed* load (the Sensor refreshes periodically, so the
+coordinator acts on possibly-stale information, as in the paper).  Migration
+costs ``migration_fixed_s + image_mb / interdc_bw`` seconds before the VM
+becomes usable, and the image transfer is billed at the destination's
+bandwidth price.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.entities import INF, Scenario, SimState
+from repro.core import policies
+
+
+def release_done_vms(scn: Scenario, state: SimState) -> SimState:
+    """Return resources of VMs whose entire workload finished (auto-destroy)."""
+    done = policies.vm_done(scn, state)
+    newly = done & state.vm_placed & ~state.vm_released
+    d = jnp.clip(state.vm_dc, 0, scn.hosts.n_dc - 1)
+    h = jnp.clip(state.vm_host, 0, scn.hosts.n_hosts - 1)
+    w = newly.astype(jnp.float32)
+    return state.replace(
+        free_ram=state.free_ram.at[d, h].add(w * scn.vms.ram_mb),
+        free_storage=state.free_storage.at[d, h].add(w * scn.vms.storage_mb),
+        free_bw=state.free_bw.at[d, h].add(w * scn.vms.bw_mbps),
+        free_cores=state.free_cores.at[d, h].add(w * scn.vms.cores),
+        vm_released=state.vm_released | newly,
+    )
+
+
+def provision_due_vms(scn: Scenario, state: SimState) -> tuple[SimState, Array]:
+    """Attempt placement for every due, unplaced, unfailed VM request.
+
+    Returns (state', n_placed_this_call).  One scan step per VM row; each step
+    is a fully-vectorized feasibility test over the global [D, H] host table
+    (the CIS registry view) followed by a two-stage lexicographic choice:
+    datacenter first (origin, then least-sensed-load peer), host within it
+    (first-fit row order, or best-fit by leftover RAM).
+    """
+    hosts, vms, pol = scn.hosts, scn.vms, scn.policy
+    D, H = hosts.cores.shape
+
+    def place_one(st: SimState, v: Array) -> tuple[SimState, Array]:
+        due = (
+            (vms.request_t[v] <= st.t)
+            & ~st.vm_placed[v]
+            & ~st.vm_failed[v]
+            & vms.exists[v]
+        )
+        feasible = (
+            hosts.exists
+            & (st.free_ram >= vms.ram_mb[v])
+            & (st.free_storage >= vms.storage_mb[v])
+            & (st.free_bw >= vms.bw_mbps[v])
+        )
+        # Phase 1 — free VM slot (unreserved cores). Phase 2 — stack onto an
+        # already-busy host (time-sharing it); forbidden when the provisioner
+        # is core-reserving, and never used for migration: the paper's rule
+        # migrates "only if the origin data center does not have the requested
+        # number of free VM slots available" — stacking happens at home.
+        slot_ok = feasible & (st.free_cores >= vms.cores[v])
+        stack_ok = feasible & ~pol.core_reserving
+        origin = vms.dc[v]
+        is_origin = jnp.arange(D) == origin
+        dc_slot = jnp.any(slot_ok, axis=1)
+        dc_stack = jnp.any(stack_ok, axis=1)
+        # Rank: origin slot < peer slot (by sensed load, federation only)
+        #       < origin stack. Sensed load is stale by design (Sensor ticks).
+        # With a Topology attached, peers are additionally penalized by the
+        # normalized inter-DC latency from the origin (locality-aware
+        # coordinator — the paper's BRITE future work made operational).
+        BIG = jnp.float32(1e9)
+        peer_score = st.sensed_load
+        if scn.topology is not None:
+            lat = scn.topology.latency_s[origin]             # [D]
+            peer_score = peer_score + lat / jnp.maximum(
+                jnp.max(lat), 1e-9
+            )
+        dc_key = jnp.where(
+            is_origin & dc_slot,
+            0.0,
+            jnp.where(
+                dc_slot & pol.federation & ~is_origin,
+                1.0 + peer_score + jnp.arange(D) * 1e-4,
+                jnp.where(is_origin & dc_stack, 3.0, BIG),
+            ),
+        )
+        dsel = jnp.argmin(dc_key)
+        found = due & (dc_key[dsel] < BIG)
+        use_slot = dc_slot[dsel]
+
+        # Host choice: slots by first-fit (CloudSim SimpleVMProvisioner) or
+        # best-fit; stacking is first-fit without a coordinator, least-loaded
+        # (max free RAM) when the federation coordinator is active.
+        cand = jnp.where(use_slot, slot_ok[dsel], stack_ok[dsel])
+        slot_key = jnp.where(
+            pol.best_fit,
+            st.free_ram[dsel] - vms.ram_mb[v],                   # tightest fit
+            jnp.arange(H, dtype=jnp.float32),                    # first fit
+        )
+        stack_key = jnp.where(
+            pol.federation,
+            -st.free_ram[dsel],                                  # least loaded
+            jnp.arange(H, dtype=jnp.float32),                    # first fit
+        )
+        host_key = jnp.where(use_slot, slot_key, stack_key)
+        host_key = jnp.where(cand, host_key, jnp.inf)
+        hsel = jnp.argmin(host_key)
+
+        migrated = found & (dsel != origin)
+        if scn.topology is not None:
+            delay = (
+                pol.migration_fixed_s
+                + scn.topology.latency_s[origin, dsel]
+                + vms.image_mb[v] / jnp.maximum(
+                    scn.topology.bw_mbps[origin, dsel], 1e-6)
+            )
+        else:
+            delay = pol.migration_fixed_s + vms.image_mb[v] / jnp.maximum(
+                pol.interdc_bw_mbps, 1e-6
+            )
+        w = found.astype(jnp.float32)
+        dsafe = jnp.where(found, dsel, 0)
+        hsafe = jnp.where(found, hsel, 0)
+
+        st = st.replace(
+            vm_host=st.vm_host.at[v].set(jnp.where(found, hsel, st.vm_host[v])),
+            vm_dc=st.vm_dc.at[v].set(jnp.where(found, dsel, st.vm_dc[v])),
+            vm_placed=st.vm_placed.at[v].set(st.vm_placed[v] | found),
+            vm_failed=st.vm_failed.at[v].set(st.vm_failed[v] | (due & ~found)),
+            vm_avail_t=st.vm_avail_t.at[v].set(
+                jnp.where(found, st.t + jnp.where(migrated, delay, 0.0),
+                          st.vm_avail_t[v])
+            ),
+            vm_migrations=st.vm_migrations.at[v].add(migrated.astype(jnp.int32)),
+            free_ram=st.free_ram.at[dsafe, hsafe].add(-w * vms.ram_mb[v]),
+            free_storage=st.free_storage.at[dsafe, hsafe].add(
+                -w * vms.storage_mb[v]
+            ),
+            free_bw=st.free_bw.at[dsafe, hsafe].add(-w * vms.bw_mbps[v]),
+            free_cores=st.free_cores.at[dsafe, hsafe].add(-w * vms.cores[v]),
+            # market: RAM + storage billed at creation (paper §3.3); the
+            # migrated image transits the inter-DC link -> bandwidth bill.
+            ram_cost=st.ram_cost.at[dsafe].add(
+                w * vms.ram_mb[v] * scn.market.cost_per_ram_mb[dsafe]
+            ),
+            storage_cost=st.storage_cost.at[dsafe].add(
+                w * vms.storage_mb[v] * scn.market.cost_per_storage_mb[dsafe]
+            ),
+            bw_cost=st.bw_cost.at[dsafe].add(
+                migrated.astype(jnp.float32)
+                * vms.image_mb[v]
+                * scn.market.cost_per_bw_mb[dsafe]
+            ),
+        )
+        return st, found
+
+    state, placed = jax.lax.scan(
+        place_one, state, jnp.arange(vms.n_vms, dtype=jnp.int32)
+    )
+    return state, jnp.sum(placed.astype(jnp.int32))
+
+
+def sense_load(scn: Scenario, state: SimState) -> Array:
+    """[D] Sensor reading: fraction of RAM capacity currently committed."""
+    total = jnp.sum(
+        jnp.where(scn.hosts.exists, scn.hosts.ram_mb, 0.0), axis=1
+    )
+    free = jnp.sum(jnp.where(scn.hosts.exists, state.free_ram, 0.0), axis=1)
+    return jnp.where(total > 0, 1.0 - free / total, 1.0)

@@ -1,0 +1,37 @@
+"""Frozen-dataclass pytrees.
+
+Every simulator structure is a struct-of-arrays pytree: entity *count* is a
+shape (static), entity *state* is data (traced).  This is the tensorized form
+of CloudSim's "minimize the number of entities" design (paper §4.1): the paper
+reduced N Java threads to 2; here entities are rows of arrays and the engine
+is a single dataflow program, so the scheduler overhead per entity is zero.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, TypeVar
+
+import jax
+
+_T = TypeVar("_T")
+
+
+def pytree_dataclass(cls: type | None = None, *, static: tuple[str, ...] = ()):
+    """Register a frozen dataclass as a JAX pytree.
+
+    Fields named in ``static`` become metadata (hashed into the jit cache key);
+    everything else is traced array data.
+    """
+
+    def wrap(c: type) -> type:
+        c = dataclasses.dataclass(frozen=True)(c)
+        names = [f.name for f in dataclasses.fields(c)]
+        for s in static:
+            if s not in names:
+                raise ValueError(f"static field {s!r} not a field of {c.__name__}")
+        data = [n for n in names if n not in static]
+        jax.tree_util.register_dataclass(c, data_fields=data, meta_fields=list(static))
+        c.replace = dataclasses.replace  # ergonomic immutable update
+        return c
+
+    return wrap(cls) if cls is not None else wrap

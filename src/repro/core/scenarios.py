@@ -1,0 +1,246 @@
+"""Scenario builders — including the paper's own experiments (§5).
+
+* ``uniform_datacenter`` / ``build_scenario``: general constructor.
+* ``fig4_scenario``: the 2-core host / 2 VMs / 8 task-units illustration.
+* ``fig7_8_scenario``: instantiation scaling, 100 -> 100 000 hosts.
+* ``fig9_10_scenario``: 10 000 hosts, 50 VMs, 500 cloudlets in groups of 50
+  every 10 simulated minutes; space- vs time-shared cloudlet scheduling.
+* ``table1_scenario``: 3 federated datacenters, migration on saturation.
+
+All builders produce numpy-backed pytrees; nothing touches devices until the
+engine is jitted, so a 100k-host scenario costs megabytes (Figure 8 redone).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.entities import (
+    SPACE_SHARED,
+    TIME_SHARED,
+    Cloudlets,
+    Hosts,
+    Market,
+    Policy,
+    Scenario,
+    VMRequests,
+)
+
+_F = np.float32
+_I = np.int32
+
+
+def make_policy(
+    host_policy: int = SPACE_SHARED,
+    vm_policy: int = SPACE_SHARED,
+    federation: bool = False,
+    core_reserving: bool = False,
+    best_fit: bool = False,
+    sensor_interval: float = 100.0,
+    migration_fixed_s: float = 30.0,
+    interdc_bw_mbps: float = 100.0,
+    horizon: float = 1e7,
+) -> Policy:
+    return Policy(
+        host_policy=jnp.asarray(host_policy, jnp.int32),
+        vm_policy=jnp.asarray(vm_policy, jnp.int32),
+        federation=jnp.asarray(federation, bool),
+        core_reserving=jnp.asarray(core_reserving, bool),
+        best_fit=jnp.asarray(best_fit, bool),
+        sensor_interval=jnp.asarray(sensor_interval, jnp.float32),
+        migration_fixed_s=jnp.asarray(migration_fixed_s, jnp.float32),
+        interdc_bw_mbps=jnp.asarray(interdc_bw_mbps, jnp.float32),
+        horizon=jnp.asarray(horizon, jnp.float32),
+    )
+
+
+def uniform_hosts(
+    n_dc: int,
+    hosts_per_dc: int,
+    cores: int = 1,
+    mips: float = 1000.0,
+    ram_mb: float = 1024.0,
+    storage_mb: float = 2_000_000.0,
+    bw_mbps: float = 1000.0,
+    exists: np.ndarray | None = None,
+) -> Hosts:
+    shape = (n_dc, hosts_per_dc)
+    ex = np.ones(shape, bool) if exists is None else exists
+    return Hosts(
+        cores=jnp.full(shape, cores, _I),
+        mips=jnp.full(shape, mips, _F),
+        ram_mb=jnp.full(shape, ram_mb, _F),
+        storage_mb=jnp.full(shape, storage_mb, _F),
+        bw_mbps=jnp.full(shape, bw_mbps, _F),
+        exists=jnp.asarray(ex),
+    )
+
+
+def uniform_vms(
+    n: int,
+    dc: int | np.ndarray = 0,
+    cores: int = 1,
+    mips: float = 1000.0,
+    ram_mb: float = 512.0,
+    storage_mb: float = 1024.0,
+    bw_mbps: float = 100.0,
+    request_t: float | np.ndarray = 0.0,
+    image_mb: float = 1024.0,
+) -> VMRequests:
+    return VMRequests(
+        dc=jnp.broadcast_to(jnp.asarray(dc, _I), (n,)),
+        cores=jnp.full((n,), cores, _I),
+        mips=jnp.full((n,), mips, _F),
+        ram_mb=jnp.full((n,), ram_mb, _F),
+        storage_mb=jnp.full((n,), storage_mb, _F),
+        bw_mbps=jnp.full((n,), bw_mbps, _F),
+        request_t=jnp.broadcast_to(jnp.asarray(request_t, _F), (n,)),
+        image_mb=jnp.full((n,), image_mb, _F),
+        exists=jnp.ones((n,), bool),
+    )
+
+
+def uniform_market(n_dc: int, cpu=3.0, ram=0.05, storage=0.001, bw=0.1) -> Market:
+    return Market(
+        cost_per_cpu_sec=jnp.full((n_dc,), cpu, _F),
+        cost_per_ram_mb=jnp.full((n_dc,), ram, _F),
+        cost_per_storage_mb=jnp.full((n_dc,), storage, _F),
+        cost_per_bw_mb=jnp.full((n_dc,), bw, _F),
+    )
+
+
+def make_cloudlets(
+    vm: np.ndarray,
+    length_mi: np.ndarray,
+    submit_t: np.ndarray,
+    cores: np.ndarray | int = 1,
+    input_mb: float = 0.3,
+    output_mb: float = 0.3,
+) -> Cloudlets:
+    """Rows are re-sorted by (submit_t, row) — FCFS is row order downstream."""
+    vm = np.asarray(vm, _I)
+    n = vm.shape[0]
+    length_mi = np.asarray(length_mi, _F)
+    submit_t = np.broadcast_to(np.asarray(submit_t, _F), (n,))
+    cores = np.broadcast_to(np.asarray(cores, _I), (n,))
+    order = np.argsort(submit_t, kind="stable")
+    return Cloudlets(
+        vm=jnp.asarray(vm[order]),
+        length_mi=jnp.asarray(length_mi[order]),
+        cores=jnp.asarray(cores[order]),
+        submit_t=jnp.asarray(submit_t[order]),
+        input_mb=jnp.full((n,), input_mb, _F),
+        output_mb=jnp.full((n,), output_mb, _F),
+        exists=jnp.ones((n,), bool),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Paper experiments
+# ---------------------------------------------------------------------------
+
+def fig4_scenario(host_policy: int, vm_policy: int, length_mi: float = 4000.0,
+                  mips: float = 10.0) -> Scenario:
+    """One 2-core host; VM1, VM2 each want 2 cores; 4 unit tasks per VM.
+
+    Analytic completion times (L = length/mips per core-dedicated task):
+      (a) space/space: VM1 tasks at L, 2L; VM2 tasks at 3L, 4L
+      (b) space/time : VM1 all at 2L; VM2 all at 4L
+      (c) time/space : both VMs: 2 tasks at 2L, 2 tasks at 4L
+      (d) time/time  : all eight at 4L
+    """
+    hosts = uniform_hosts(1, 1, cores=2, mips=mips, ram_mb=4096.0)
+    vms = uniform_vms(2, cores=2, mips=mips, ram_mb=1024.0)
+    cl_vm = np.array([0, 0, 0, 0, 1, 1, 1, 1])
+    cls = make_cloudlets(cl_vm, np.full(8, length_mi), np.zeros(8),
+                         input_mb=0.0, output_mb=0.0)
+    pol = make_policy(host_policy=host_policy, vm_policy=vm_policy)
+    return Scenario(hosts=hosts, vms=vms, cloudlets=cls,
+                    market=uniform_market(1), policy=pol)
+
+
+def fig7_8_scenario(n_hosts: int) -> Scenario:
+    """Instantiation-scaling environment: one DC, a broker, no workload."""
+    hosts = uniform_hosts(1, n_hosts, cores=1, mips=1000.0,
+                          ram_mb=1024.0, storage_mb=2_000_000.0)
+    vms = uniform_vms(1)
+    cls = make_cloudlets(np.array([0]), np.array([1.0]), np.array([0.0]),
+                         input_mb=0.0, output_mb=0.0)
+    return Scenario(hosts=hosts, vms=vms, cloudlets=cls,
+                    market=uniform_market(1), policy=make_policy())
+
+
+def fig9_10_scenario(vm_policy: int, n_hosts: int = 10_000, n_vms: int = 50,
+                     n_groups: int = 10, group_interval_s: float = 600.0,
+                     task_mi: float = 1_200_000.0) -> Scenario:
+    """Paper §5 scheduling test: 10k hosts (1 core @1000 MIPS, 1 GB RAM, 2 TB),
+    50 VMs (512 MB), 500 x 20-minute task units submitted 50-at-a-time every
+    10 minutes; host-level policy space-shared with core reservation so each
+    VM owns a host ("only one VM was allowed to be hosted in a host").
+    """
+    hosts = uniform_hosts(1, n_hosts, cores=1, mips=1000.0, ram_mb=1024.0,
+                          storage_mb=2_000_000.0)
+    vms = uniform_vms(n_vms, ram_mb=512.0, storage_mb=1024.0)
+    n_cl = n_groups * n_vms
+    cl_vm = np.tile(np.arange(n_vms), n_groups)
+    submit = np.repeat(np.arange(n_groups) * group_interval_s, n_vms)
+    cls = make_cloudlets(cl_vm, np.full(n_cl, task_mi), submit,
+                         input_mb=0.3, output_mb=0.3)
+    pol = make_policy(host_policy=SPACE_SHARED, vm_policy=vm_policy,
+                      core_reserving=True)
+    return Scenario(hosts=hosts, vms=vms, cloudlets=cls,
+                    market=uniform_market(1), policy=pol)
+
+
+def table1_scenario(federation: bool, n_dc: int = 3, hosts_per_dc: int = 10,
+                    dc0_hosts: int = 7, n_vms: int = 25,
+                    cloudlet_mi: float = 1_800_000.0,
+                    peer_background: int = 5) -> Scenario:
+    """Federated 3-DC experiment (paper §5, Table 1).
+
+    The paper's text under-specifies the saturation mechanism (its stated 50
+    hosts/DC would absorb all 25 VMs with no contention at all), so we
+    calibrate to the published *qualitative* claim — >50% mean-turnaround and
+    ~20% makespan improvement.  Setup: DC0 has ``dc0_hosts`` single-core
+    hosts, peers have ``hosts_per_dc`` with ``peer_background`` pre-existing
+    idle VMs each (slots they hold).  All 25 user VMs land at DC0; the
+    provisioner prefers free slots (origin, then least-loaded-peer iff
+    federated — the CloudCoordinator rule) and otherwise time-share-stacks at
+    the origin.  Without federation first-fit stacking packs hosts 4-deep
+    (1024/256 MB) -> 7200 s tasks; with federation the overflow spreads over
+    peer slots and lightly-stacked origin hosts.  See
+    benchmarks/table1_federation.py for the measured table.
+    """
+    exists = np.ones((n_dc, hosts_per_dc), bool)
+    exists[0, dc0_hosts:] = False
+    hosts = uniform_hosts(n_dc, hosts_per_dc, cores=1, mips=1000.0,
+                          ram_mb=1024.0, storage_mb=2_000_000.0,
+                          exists=exists)
+    # Background VMs occupy slots on peer DCs (they idle: no cloudlets).
+    n_bg = peer_background * (n_dc - 1)
+    bg_dc = np.repeat(np.arange(1, n_dc), peer_background)
+    total_vms = n_vms + n_bg
+    vms = uniform_vms(
+        total_vms,
+        dc=np.concatenate([bg_dc, np.zeros(n_vms, int)]),
+        ram_mb=256.0,
+        storage_mb=1024.0,
+        request_t=np.concatenate([np.full(n_bg, 0.0), np.full(n_vms, 1.0)]),
+        image_mb=1024.0,
+    )
+    cl_vm = np.arange(n_bg, total_vms)
+    cls = make_cloudlets(cl_vm, np.full(n_vms, cloudlet_mi),
+                         np.full(n_vms, 1.0), input_mb=0.3, output_mb=0.3)
+    pol = make_policy(
+        host_policy=TIME_SHARED,
+        vm_policy=TIME_SHARED,
+        federation=federation,
+        core_reserving=False,
+        sensor_interval=50.0,
+        migration_fixed_s=30.0,
+        interdc_bw_mbps=100.0,
+        horizon=50_000.0,
+    )
+    return Scenario(hosts=hosts, vms=vms, cloudlets=cls,
+                    market=uniform_market(n_dc),
+                    policy=pol, max_steps=4 * (total_vms + n_vms) + 1200)

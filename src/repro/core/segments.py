@@ -1,0 +1,59 @@
+"""Vectorized per-segment reductions in arrival (row) order.
+
+CloudSim's space-shared queues are "first K entities whose cumulative core
+demand fits" (paper Figure 4a/4c).  Tensorized, that is an *exclusive prefix
+sum of demand within each segment, in row order*: entity i runs iff
+``prefix(i) + demand(i) <= capacity(segment(i))``.
+
+Implemented with one stable argsort + associative_scan, O(N log N), no
+host<->device sync, fully vmappable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+
+def segment_prefix_sum(values: Array, segment_ids: Array, num_segments: int) -> Array:
+    """Exclusive prefix sum of ``values`` within each segment, in index order.
+
+    ``segment_ids`` entries >= num_segments (or negative mapped there by the
+    caller) contribute nothing and receive garbage prefixes — callers mask.
+    """
+    n = values.shape[0]
+    seg = jnp.clip(segment_ids, 0, num_segments)  # clip strays into a junk segment
+    order = jnp.argsort(seg, stable=True)         # stable => row order inside segs
+    v_sorted = values[order]
+    seg_sorted = seg[order]
+    incl = jnp.cumsum(v_sorted)
+    excl = incl - v_sorted
+    # Subtract each segment's starting offset: forward-fill the exclusive sum
+    # observed at the first row of each segment. cumsum is non-decreasing for
+    # non-negative values, so a running max implements the forward fill.
+    is_first = jnp.concatenate(
+        [jnp.ones((1,), dtype=bool), seg_sorted[1:] != seg_sorted[:-1]]
+    )
+    base = jnp.where(is_first, excl, -jnp.inf)
+    base = jax.lax.associative_scan(jnp.maximum, base)
+    prefix_sorted = excl - base
+    out = jnp.zeros_like(values).at[order].set(prefix_sorted.astype(values.dtype))
+    return out
+
+
+def segment_sum(values: Array, segment_ids: Array, num_segments: int) -> Array:
+    """Sum of ``values`` per segment -> [num_segments]."""
+    seg = jnp.clip(segment_ids, 0, num_segments)
+    return jnp.zeros((num_segments + 1,), values.dtype).at[seg].add(values)[:-1]
+
+
+def segment_all(values: Array, segment_ids: Array, num_segments: int) -> Array:
+    """Logical AND of ``values`` per segment (vacuously True) -> [num_segments]."""
+    neg = segment_sum((~values).astype(jnp.int32), segment_ids, num_segments)
+    return neg == 0
+
+
+def segment_min(values: Array, segment_ids: Array, num_segments: int, fill) -> Array:
+    seg = jnp.clip(segment_ids, 0, num_segments)
+    out = jnp.full((num_segments + 1,), fill, values.dtype)
+    return out.at[seg].min(values)[:-1]

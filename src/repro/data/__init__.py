@@ -1,0 +1,4 @@
+"""repro.data — deterministic synthetic pipeline (per-host sharded, prefetched)."""
+from repro.data.pipeline import MarkovSource, ShardedLoader
+
+__all__ = ["MarkovSource", "ShardedLoader"]

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+  * vm_update        — the simulator's fused advance sweep (min-reduce +
+                       work depletion), two-phase sequential grid.
+  * flash_attention  — GQA online-softmax attention with sliding window and
+                       logit softcap (covers all assigned attention archs).
+  * ssd_scan         — Mamba2 state-space-duality chunked scan with the
+                       inter-chunk state carried in VMEM scratch.
+
+Each kernel has a pure-jnp oracle in ref.py; ops.py exposes jitted wrappers
+that interpret on CPU and compile to Mosaic on TPU.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+from repro.kernels.vm_update import advance_sweep_pallas
+
+__all__ = [
+    "ops", "ref",
+    "flash_attention_pallas", "ssd_scan_pallas", "advance_sweep_pallas",
+]

@@ -1,0 +1,152 @@
+"""Pallas TPU flash attention (GQA + sliding window + logit softcap + causal).
+
+Online-softmax attention tiled for the TPU memory hierarchy: the grid is
+``(B, Hq, Sq/bq, Sk/bk)`` with the key axis innermost (sequential on TPU), so
+the running (max, sum, accumulator) state lives in VMEM scratch across key
+blocks and each q/k/v tile is fetched HBM->VMEM exactly once.  MXU-aligned
+tiles (bq, bk multiples of 128 on the matmul dims) keep the systolic array
+fed; the softcap/tanh and masking run on the VPU between the two matmuls.
+
+Covers every attention variant in the assigned architecture pool:
+  * GQA             — kv-head index map ``h // group`` (no KV repetition in HBM)
+  * sliding window  — gemma2 local layers (mask, plus whole-block skip)
+  * logit softcap   — gemma2 (applied pre-mask, as in the reference)
+  * encoder (non-causal) — whisper encoder / cross-attention
+
+Oracle: ref.attention_ref; swept over shapes/dtypes in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1.0e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_sc, l_sc, *,
+                  scale, causal, window, softcap, sq, sk, bq, bk):
+    j = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_sc[...] = jnp.full_like(m_sc, _NEG)
+        l_sc[...] = jnp.zeros_like(l_sc)
+
+    i = pl.program_id(2)
+    row = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + (sk - sq)
+    col = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = col < sk                       # key padding
+    if causal:
+        valid &= col <= row
+    if window is not None:
+        valid &= col > row - window
+
+    # Whole-block skip: with causal/window masking many (i, j) tiles are
+    # entirely masked; never issue their matmuls.
+    row_lo = i * bq + (sk - sq)
+    row_hi = row_lo + bq - 1
+    col_lo = j * bk
+    live = jnp.asarray(True)
+    if causal:
+        live &= col_lo <= row_hi
+    if window is not None:
+        live &= (col_lo + bk - 1) > row_lo - window
+
+    @pl.when(live)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(valid, s, _NEG)
+
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        # guard: rows with every key masked so far have m == _NEG and would
+        # otherwise turn exp(_NEG - _NEG) into spurious mass
+        p = jnp.where(s > _NEG / 2, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_sc[...] = alpha * l_sc[...] + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc[...] = acc[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_sc[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _emit():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0, 0] = (acc[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "bq", "bk",
+                     "interpret"),
+)
+def flash_attention_pallas(
+    q: Array,  # [B, Hq, Sq, D]
+    k: Array,  # [B, Hk, Sk, D]
+    v: Array,  # [B, Hk, Sk, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> Array:
+    B, Hq, Sq, D = q.shape
+    Hk, Sk = k.shape[1], k.shape[2]
+    assert Hq % Hk == 0, "GQA requires Hq % Hk == 0"
+    group = Hq // Hk
+    scale_v = (D ** -0.5) if scale is None else scale
+
+    bq_ = min(bq, max(Sq, 8))
+    bk_ = min(bk, max(Sk, 8))
+    pq = (-Sq) % bq_
+    pk = (-Sk) % bk_
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq = (Sq + pq) // bq_
+    nk = (Sk + pk) // bk_
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale_v, causal=causal, window=window, softcap=softcap,
+        sq=Sq, sk=Sk, bq=bq_, bk=bk_,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq_, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk_, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk_, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq_, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq + pq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, D), jnp.float32),
+            pltpu.VMEM((bq_, 1), jnp.float32),
+            pltpu.VMEM((bq_, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :Sq, :]

@@ -1,0 +1,54 @@
+"""Jitted public wrappers for the kernel layer.
+
+Routing policy:
+  * On CPU (this container) the Pallas kernels run in ``interpret=True`` —
+    bit-faithful to the kernel body, executed in Python, used by tests.
+  * On TPU (the target) ``interpret=False`` compiles to Mosaic.
+  * The models/engine default to the pure-jnp reference implementations
+    (ref.py), which XLA fuses well and which lower on any backend; the
+    Pallas path is selected via config (``attn_impl="pallas"`` etc.).
+"""
+from __future__ import annotations
+
+import jax
+from jax import Array
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+from repro.kernels.vm_update import advance_sweep_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def advance_sweep(rem: Array, rate: Array, active: Array, bound_dt: Array):
+    """Engine advance sweep — Pallas twin of engine._advance_jnp."""
+    return advance_sweep_pallas(
+        rem, rate, active, bound_dt, interpret=not _on_tpu()
+    )
+
+
+def flash_attention(
+    q: Array, k: Array, v: Array, *,
+    causal: bool = True, window: int | None = None,
+    softcap: float = 0.0, scale: float | None = None,
+) -> Array:
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        interpret=not _on_tpu(),
+    )
+
+
+def ssd_scan(x, dt, A, Bm, Cm, D, *, chunk: int = 128) -> Array:
+    return ssd_scan_pallas(
+        x, dt, A, Bm, Cm, D, chunk=chunk, interpret=not _on_tpu()
+    )
+
+
+# re-exported oracles (also the default production path on CPU)
+attention_ref = ref.attention_ref
+ssd_ref = ref.ssd_ref
+ssd_chunked_ref = ref.ssd_chunked_ref
+advance_sweep_ref = ref.advance_sweep_ref

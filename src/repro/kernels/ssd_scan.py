@@ -1,0 +1,130 @@
+"""Pallas TPU kernel for the Mamba2 SSD (state-space duality) chunked scan.
+
+The SSD recurrence  h_t = exp(dt_t A) h_{t-1} + dt_t x_t B_t^T,
+                    y_t = C_t h_t + D x_t
+is evaluated chunk-parallel (arXiv:2405.21060 §6): within a chunk of Q steps
+the dual quadratic form (an attention-like [Q, Q] matmul with a decay mask)
+produces the intra-chunk output on the MXU, while a [P, N] state matrix in
+VMEM scratch carries the recurrence *across* chunks — the chunk axis is the
+innermost TPU grid dimension, which executes sequentially, so the carried
+state never round-trips to HBM.
+
+Grid: (B, H, S/Q).  Tiles: x (Q, P), B/C (Q, N), dt (Q,) with Q = 128 and
+P = N = 64..128 — three MXU-shaped matmuls per chunk ([QxN]@[NxQ],
+[QxQ]@[QxP], [QxN]@[NxP]) plus VPU exp/cumsum.
+
+Hardware adaptation (DESIGN.md §2): the original Mamba2 kernel is a CUDA
+warp-specialized scan; on TPU the same math maps onto the sequential grid +
+VMEM-resident state, with no cross-lane shuffles needed.
+
+Oracle: ref.ssd_ref (sequential scan) and ref.ssd_chunked_ref (same math in
+plain jnp, also the production XLA path for training).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_ref, d_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, state,
+                *, chunk: int):
+    h = pl.program_id(1)
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _reset():
+        state[...] = jnp.zeros_like(state)
+
+    a = a_ref[h]                                   # scalar decay rate (SMEM)
+    dskip = d_ref[h]
+    x = x_ref[0, 0].astype(jnp.float32)            # [Q, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)          # [Q]
+    Bm = b_ref[0, 0].astype(jnp.float32)           # [Q, N]
+    Cm = c_ref[0, 0].astype(jnp.float32)           # [Q, N]
+
+    dA = dt * a                                    # [Q]
+    cum = jnp.cumsum(dA)                           # inclusive
+    seg = cum[chunk - 1]
+
+    # intra-chunk dual form: W[i,j] = (C_i . B_j) exp(cum_i - cum_j) dt_j, i>=j
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q, Q]
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    w = jnp.where(li >= lj, cb * decay * dt[None, :], 0.0)
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [Q, P]
+
+    # inter-chunk: y_i += C_i h_in exp(cum_i);  h_in = state before this chunk
+    y += jax.lax.dot_general(
+        Cm, state[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * jnp.exp(cum)[:, None]
+
+    y_ref[0, 0] = (y + dskip * x).astype(y_ref.dtype)
+
+    # state update: h_out = exp(seg) h_in + sum_j exp(seg - cum_j) dt_j x_j B_j^T
+    wj = jnp.exp(seg - cum) * dt                                  # [Q]
+    state[...] = jnp.exp(seg) * state[...] + jax.lax.dot_general(
+        x, Bm * wj[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                              # [P, N]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(
+    x: Array,    # [B, S, H, P]
+    dt: Array,   # [B, S, H]
+    A: Array,    # [H]
+    Bm: Array,   # [B, S, G, N]
+    Cm: Array,   # [B, S, G, N]
+    D: Array,    # [H]
+    *,
+    chunk: int = 128,
+    interpret: bool = True,
+) -> Array:
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert H % G == 0
+    rep = H // G
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # dt=0 -> identity steps
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+
+    # layout: time-major per (b, h) tiles
+    xt = jnp.transpose(x, (0, 2, 1, 3))            # [B, H, S, P]
+    dtt = jnp.transpose(dt, (0, 2, 1))             # [B, H, S]
+    Bt = jnp.transpose(Bm, (0, 2, 1, 3))           # [B, G, S, N]
+    Ct = jnp.transpose(Cm, (0, 2, 1, 3))
+
+    y = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(Bsz, H, nc),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # A [H]
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # D [H]
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, 1, chunk, N),
+                         lambda b, h, c, r=rep: (b, h // r, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N),
+                         lambda b, h, c, r=rep: (b, h // r, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, H, Sp, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(A.astype(jnp.float32), D.astype(jnp.float32), xt, dtt, Bt, Ct)
+
+    return jnp.transpose(y, (0, 2, 1, 3))[:, :S]

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel for the simulator's advance sweep (``vm_update``).
+
+The hot loop of the tensorized CloudSim engine is, per event:
+
+    dt      = min( min_i  rem_i / rate_i  over active i,  bound )
+    rem_i  -= rate_i * dt
+
+A naive implementation reads ``rem``/``rate`` twice from HBM (once for the
+min-reduce, once for the update).  On TPU the grid is executed sequentially,
+so we fuse both passes into ONE kernel with a two-phase grid
+``(2, num_blocks)``: phase 0 accumulates the global min into SMEM scratch,
+phase 1 re-streams the blocks and applies the depletion.  VMEM tiles of
+``block`` cloudlets keep the working set on-chip; the only cross-block value
+is one f32 scalar in SMEM.
+
+Adaptation note (DESIGN.md §2): CloudSim walks Java object lists here; the
+TPU-native form is this dense masked sweep — entity count scales with VMEM
+bandwidth, not scheduler overhead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1.0e30
+_INF = 3.0e38
+
+
+def _sweep_kernel(rem_ref, rate_ref, active_ref, bound_ref,
+                  dt_ref, out_ref, min_sc):
+    phase = pl.program_id(0)
+    j = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when((phase == 0) & (j == 0))
+    def _init():
+        min_sc[0] = bound_ref[0]
+
+    @pl.when(phase == 0)
+    def _reduce():
+        rem = rem_ref[...]
+        rate = rate_ref[...]
+        act = active_ref[...] > 0.5
+        dt_block = jnp.where(
+            act & (rate > 0), rem / jnp.maximum(rate, 1e-30), _INF
+        )
+        min_sc[0] = jnp.minimum(min_sc[0], jnp.min(dt_block))
+
+    @pl.when(phase == 1)
+    def _apply():
+        dt = min_sc[0]
+        rem = rem_ref[...]
+        rate = rate_ref[...]
+        act = active_ref[...] > 0.5
+        out_ref[...] = jnp.where(
+            act, jnp.maximum(rem - rate * dt, 0.0), rem
+        )
+
+        @pl.when(j == nb - 1)
+        def _emit():
+            dt_ref[0] = dt
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def advance_sweep_pallas(
+    rem: Array,
+    rate: Array,
+    active: Array,
+    bound_dt: Array,
+    *,
+    block: int = 1024,
+    interpret: bool = True,
+) -> tuple[Array, Array]:
+    """Fused min-reduce + depletion. Shapes: rem/rate/active [C] -> (dt, rem')."""
+    (c,) = rem.shape
+    pad = (-c) % block
+    remp = jnp.pad(rem.astype(jnp.float32), (0, pad))
+    ratep = jnp.pad(rate.astype(jnp.float32), (0, pad))
+    actp = jnp.pad(active.astype(jnp.float32), (0, pad))  # pad rows inactive
+    nb = (c + pad) // block
+    bound = jnp.reshape(bound_dt.astype(jnp.float32), (1,))
+
+    dt, new_rem = pl.pallas_call(
+        _sweep_kernel,
+        grid=(2, nb),
+        in_specs=[
+            pl.BlockSpec((block,), lambda p, j: (j,)),
+            pl.BlockSpec((block,), lambda p, j: (j,)),
+            pl.BlockSpec((block,), lambda p, j: (j,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block,), lambda p, j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((c + pad,), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.float32)],
+        interpret=interpret,
+    )(remp, ratep, actp, bound)
+    return dt[0], new_rem[:c].astype(rem.dtype)

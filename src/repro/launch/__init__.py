@@ -1,0 +1,8 @@
+"""repro.launch — production mesh, multi-pod dry-run, train/serve drivers.
+
+NOTE: import ``repro.launch.dryrun`` only as a __main__ entry point — it sets
+XLA_FLAGS (512 host devices) at import time.
+"""
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

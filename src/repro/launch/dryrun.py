@@ -1,0 +1,315 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the full-size model config (ShapeDtypeStruct only —
+nothing is allocated), derives parameter/input shardings from repro.dist,
+lowers the step function against the production mesh, compiles it, and
+records ``memory_analysis()`` (proves it fits), ``cost_analysis()`` and the
+collective schedule (feeds EXPERIMENTS.md §Roofline).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+
+Results are cached as JSON under results/dryrun/ so the full sweep is
+resumable.
+"""
+import argparse
+import glob
+import json
+import shutil
+import tempfile
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import hlo_walk, memory as memest, roofline
+from repro.configs import ARCH_IDS, get_config
+from repro.dist import input_pspec_tree, named, param_pspec_tree
+from repro.dist.act_sharding import activation_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.models import ALL_SHAPES, build_model, shape_applicable
+from repro.models.config import ShapeSpec
+from repro.train import OptConfig, adamw_init, make_train_step
+
+RESULTS_DIR = "results/dryrun"
+
+
+def _shape_by_name(name: str) -> ShapeSpec:
+    for s in ALL_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def lower_cell(
+    arch: str,
+    shape: ShapeSpec,
+    mesh,
+    *,
+    microbatches: int = 4,
+    donate: bool = True,
+    extra_cfg: dict | None = None,
+    sequence_parallel: bool = False,
+    master_bf16: bool = False,
+    moments_bf16: bool = False,
+    strategy: str = "2d",
+):
+    """Build + lower + compile one cell. Returns (compiled, lowered, meta)."""
+    cfg = get_config(arch, dtype="bfloat16")
+    if extra_cfg:
+        import dataclasses
+        extra = dict(extra_cfg)
+        capf = extra.pop("moe_capacity_factor", None)
+        if capf is not None and cfg.moe is not None:
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=capf))
+        cfg = dataclasses.replace(cfg, **extra)
+    model = build_model(cfg)
+    pspec = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if master_bf16 or shape.kind != "train":
+        # store weights bf16 (training: bf16 master + f32 moments; serving:
+        # bf16 deployment weights)
+        pspec = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(
+                l.shape,
+                jnp.bfloat16 if l.dtype == jnp.float32 else l.dtype),
+            pspec,
+        )
+    param_specs = param_pspec_tree(pspec, mesh, strategy)
+    param_sh = named(mesh, param_specs)
+
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(adamw_init, pspec)
+        if moments_bf16:
+            opt_shape = {
+                "mu": jax.tree.map(
+                    lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16),
+                    opt_shape["mu"]),
+                "nu": jax.tree.map(
+                    lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16),
+                    opt_shape["nu"]),
+                "step": opt_shape["step"],
+            }
+        opt_specs = {
+            "mu": param_specs, "nu": param_specs,
+            "step": jax.sharding.PartitionSpec(),
+        }
+        opt_sh = named(mesh, opt_specs)
+        specs = model.input_specs(shape)
+        in_sh = named(mesh, input_pspec_tree(specs, mesh, strategy))
+        step = make_train_step(
+            model, OptConfig(), microbatches=microbatches,
+            param_shardings=param_sh,
+        )
+
+        fn = jax.jit(
+            step,
+            in_shardings=(param_sh, opt_sh, in_sh["batch"]),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        with mesh, activation_shardings(
+                mesh, sequence_parallel=sequence_parallel,
+                strategy=strategy):
+            lowered = fn.lower(pspec, opt_shape, specs["batch"])
+    elif shape.kind == "prefill":
+        specs = model.input_specs(shape)
+        in_sh = named(mesh, input_pspec_tree(specs, mesh, strategy))
+
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, shape.seq_len)
+
+        fn = jax.jit(prefill_fn, in_shardings=(param_sh, in_sh["batch"]))
+        with mesh, activation_shardings(
+                mesh, sequence_parallel=sequence_parallel,
+                strategy=strategy):
+            lowered = fn.lower(pspec, specs["batch"])
+    else:  # decode
+        specs = model.input_specs(shape)
+        in_sh = named(mesh, input_pspec_tree(specs, mesh, strategy))
+
+        def decode_fn(params, caches, token, pos):
+            return model.decode_step(params, caches, token, pos)
+
+        fn = jax.jit(
+            decode_fn,
+            in_shardings=(param_sh, in_sh["caches"], in_sh["token"],
+                          in_sh["pos"]),
+            donate_argnums=(1,) if donate else (),
+        )
+        with mesh, activation_shardings(
+                mesh, sequence_parallel=sequence_parallel):
+            lowered = fn.lower(pspec, specs["caches"], specs["token"],
+                               specs["pos"])
+
+    # Dump the post-SPMD-partitioning module: the CPU backend's float
+    # normalization upcasts bf16 collectives to f32 in the FINAL module
+    # (2x inflation vs the TPU target), so collective accounting reads the
+    # pre-normalization partitioned HLO instead.
+    dump_dir = tempfile.mkdtemp(prefix="hlo_dump_")
+    compiled = lowered.compile(compiler_options={
+        "xla_dump_to": dump_dir,
+        "xla_dump_hlo_pass_re": "spmd-partitioning",
+    })
+    spmd_hlo = None
+    cands = glob.glob(os.path.join(dump_dir, "*after_spmd-partitioning*.txt"))
+    if cands:
+        biggest = max(cands, key=os.path.getsize)
+        with open(biggest) as f:
+            spmd_hlo = f.read()
+    shutil.rmtree(dump_dir, ignore_errors=True)
+    return compiled, lowered, {"cfg": cfg, "model": model,
+                               "spmd_hlo": spmd_hlo}
+
+
+def run_cell(arch: str, shape: ShapeSpec, mesh_kind: str,
+             microbatches: int = 4, extra_cfg: dict | None = None,
+             tag: str = "", sequence_parallel: bool = False,
+             master_bf16: bool = False, moments_bf16: bool = False,
+             strategy: str = "2d") -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    cfg = get_config(arch)
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape.name, "mesh": mesh_kind,
+                "skipped": why}
+
+    t0 = time.time()
+    compiled, lowered, meta = lower_cell(
+        arch, shape, mesh, microbatches=microbatches, extra_cfg=extra_cfg,
+        sequence_parallel=sequence_parallel, master_bf16=master_bf16,
+        moments_bf16=moments_bf16, strategy=strategy,
+    )
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    walk = hlo_walk.analyze_hlo(hlo, default_group=n_chips)
+    if meta.get("spmd_hlo"):
+        # Two views of the collective schedule, each an overcount in one
+        # direction: the FINAL module is dtype-inflated (CPU float
+        # normalization upcasts bf16 collectives to f32; TPU would not),
+        # the POST-SPMD module predates all-reduce combining (op-inflated).
+        # Per kind we take the smaller — a tight upper bound either way.
+        walk_spmd = hlo_walk.analyze_hlo(meta["spmd_hlo"],
+                                         default_group=n_chips)
+        for k in set(walk.coll_eff_by_kind) | set(walk_spmd.coll_eff_by_kind):
+            a = walk.coll_eff_by_kind.get(k, float("inf"))
+            b = walk_spmd.coll_eff_by_kind.get(k, float("inf"))
+            if b < a:
+                walk.coll_eff_by_kind[k] = b
+                walk.coll_raw[k] = walk_spmd.coll_raw.get(k, 0)
+                walk.coll_counts[k] = walk_spmd.coll_counts.get(k, 0)
+    est = memest.estimate(
+        meta["model"], meta["cfg"], shape, mesh, microbatches=microbatches,
+        sequence_parallel=sequence_parallel, master_bf16=master_bf16,
+        moments_bf16=moments_bf16, strategy=strategy,
+    )
+    rl = roofline.analyze_walk(
+        walk, est, n_chips, roofline.model_flops_for(meta["cfg"], shape)
+    )
+    out = {
+        "arch": arch,
+        "shape": shape.name,
+        "mesh": mesh_kind,
+        "n_chips": int(n_chips),
+        "compile_s": compile_s,
+        "microbatches": microbatches if shape.kind == "train" else None,
+        "tag": tag,
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+            "peak_bytes_est": int(
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+                - getattr(mem, "alias_size_in_bytes", 0)
+            ),
+        },
+        "params": int(meta["cfg"].param_count()),
+        "active_params": int(meta["cfg"].active_param_count()),
+        "memory_model": est.as_dict(),
+        "xla_cost_raw": {k: float(v) for k, v in cost.items()
+                         if isinstance(v, (int, float))},
+        "roofline": rl.as_dict(),
+    }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=[s.name for s in ALL_SHAPES])
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in ALL_SHAPES:
+                cells.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, _shape_by_name(args.shape))]
+
+    for arch, shape in cells:
+        path = os.path.join(
+            RESULTS_DIR, f"{arch}__{shape.name}__{args.mesh}.json"
+        )
+        if os.path.exists(path) and not args.force:
+            print(f"[skip cached] {arch} x {shape.name} x {args.mesh}")
+            continue
+        print(f"[dryrun] {arch} x {shape.name} x {args.mesh} ...", flush=True)
+        try:
+            out = run_cell(arch, shape, args.mesh,
+                           microbatches=args.microbatches)
+        except Exception:
+            out = {
+                "arch": arch, "shape": shape.name, "mesh": args.mesh,
+                "error": traceback.format_exc(),
+            }
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2)
+        if "error" in out:
+            print(f"  ERROR (see {path})")
+            print("  " + out["error"].strip().splitlines()[-1])
+        elif "skipped" in out:
+            print(f"  SKIPPED: {out['skipped']}")
+        else:
+            r = out["roofline"]
+            print(
+                "  ok compile=%.0fs resid=%.2fGB xla_tmp=%.2fGB comp=%.1fms "
+                "memT=%.1fms coll=%.1fms bneck=%s MFU-bound=%.1f%%"
+                % (
+                    out["compile_s"],
+                    out["memory_model"]["residency_bytes"] / 1e9,
+                    out["memory"]["temp_bytes"] / 1e9,
+                    r["compute_s"] * 1e3,
+                    r["memory_s"] * 1e3,
+                    r["collective_s"] * 1e3,
+                    r["bottleneck"],
+                    100 * r["roofline_fraction"],
+                ),
+                flush=True,
+            )
+
+
+if __name__ == "__main__":
+    main()

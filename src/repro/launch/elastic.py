@@ -1,0 +1,123 @@
+"""Elastic / fault-tolerant runtime: the CloudCoordinator applied to training.
+
+Mapping (DESIGN.md §2): CloudSim's coordinator senses datacenter health and
+migrates VMs; here the coordinator senses worker health (heartbeats /
+injected failures), and "migration" is checkpoint-restore onto the surviving
+mesh — a training job's VM image is its (params, opt_state) checkpoint.
+
+``ElasticRunner`` drives run_training under supervision:
+  1. run until failure (or completion),
+  2. on failure: shrink the logical resource set (simulating lost nodes),
+  3. restore the latest checkpoint — restore() re-device_puts onto whatever
+     mesh is now available (resharding restore),
+  4. continue training; repeat up to ``max_restarts``.
+
+The CloudSim engine itself is used to *plan* the restart: the coordinator
+simulates the remaining work as cloudlets over the surviving hosts to decide
+whether finishing on the shrunken cluster beats waiting for repair (the
+paper's "evaluate before deploying" loop, pointed at ourselves).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.ckpt import latest_step
+from repro.core import SPACE_SHARED, Scenario, scenarios as builders, simulate
+from repro.launch.train import run_training
+
+
+@dataclasses.dataclass
+class RestartDecision:
+    finish_on_survivors_s: float
+    wait_for_repair_s: float
+    choice: str
+
+
+def plan_restart(
+    steps_remaining: int,
+    step_time_s: float,
+    n_workers: int,
+    n_survivors: int,
+    repair_time_s: float,
+) -> RestartDecision:
+    """CloudSim-planned restart: simulate 'remaining work on survivors' vs
+    'wait for repair, then full speed' and pick the shorter makespan."""
+    work_mi = steps_remaining * step_time_s * 1000.0  # 1000 MIPS host = 1x
+
+    def makespan(n_hosts: int, delay: float) -> float:
+        hosts = builders.uniform_hosts(1, max(n_workers, 1), cores=1,
+                                       mips=1000.0, ram_mb=1e6)
+        import numpy as _np
+        exists = _np.zeros((1, max(n_workers, 1)), bool)
+        exists[0, :n_hosts] = True
+        hosts = hosts.replace(exists=jax.numpy.asarray(exists))
+        vms = builders.uniform_vms(n_hosts, ram_mb=1.0, bw_mbps=1.0)
+        # data-parallel training: work splits evenly across workers
+        cl = builders.make_cloudlets(
+            _np.arange(n_hosts),
+            _np.full(n_hosts, work_mi / max(n_hosts, 1)),
+            _np.full(n_hosts, delay),
+            input_mb=0.0, output_mb=0.0,
+        )
+        scn = Scenario(hosts=hosts, vms=vms, cloudlets=cl,
+                       market=builders.uniform_market(1),
+                       policy=builders.make_policy(
+                           host_policy=SPACE_SHARED, vm_policy=SPACE_SHARED,
+                           core_reserving=True, horizon=1e9))
+        return float(simulate(scn).makespan)
+
+    on_survivors = makespan(n_survivors, 0.0)
+    after_repair = makespan(n_workers, repair_time_s)
+    choice = "survivors" if on_survivors <= after_repair else "wait_for_repair"
+    return RestartDecision(on_survivors, after_repair, choice)
+
+
+class ElasticRunner:
+    def __init__(self, cfg, ckpt_dir: str, *, steps: int = 60,
+                 global_batch: int = 8, seq_len: int = 64,
+                 ckpt_every: int = 10, max_restarts: int = 3,
+                 n_workers: int = 4, repair_time_s: float = 600.0):
+        self.cfg = cfg
+        self.ckpt_dir = ckpt_dir
+        self.kw = dict(steps=steps, global_batch=global_batch,
+                       seq_len=seq_len, ckpt_every=ckpt_every,
+                       ckpt_dir=ckpt_dir)
+        self.max_restarts = max_restarts
+        self.n_workers = n_workers
+        self.repair_time_s = repair_time_s
+        self.events: list[dict] = []
+
+    def run(self, fail_at_steps: list[int] | None = None) -> dict:
+        fail_at = list(fail_at_steps or [])
+        survivors = self.n_workers
+        restarts = 0
+        while True:
+            inject = fail_at.pop(0) if fail_at else None
+            try:
+                out = run_training(self.cfg, fail_at_step=inject, **self.kw)
+                self.events.append({"kind": "finished",
+                                    "final_loss": out["final_loss"]})
+                return {"result": out, "events": self.events,
+                        "restarts": restarts}
+            except RuntimeError as e:
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                survivors = max(survivors - 1, 1)
+                ck = latest_step(self.ckpt_dir)
+                remaining = self.kw["steps"] - (ck or 0)
+                plan = plan_restart(remaining, 1.0, self.n_workers,
+                                    survivors, self.repair_time_s)
+                self.events.append({
+                    "kind": "failure", "error": str(e),
+                    "resume_step": ck, "survivors": survivors,
+                    "plan": dataclasses.asdict(plan),
+                })
+                print(f"[elastic] failure ({e}); resume from step {ck} on "
+                      f"{survivors} workers (plan: {plan.choice})",
+                      flush=True)
+                # loop: run_training resumes from the latest checkpoint

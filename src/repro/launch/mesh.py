@@ -1,0 +1,37 @@
+"""Production mesh construction (pure function — importing this module never
+touches jax device state).
+
+Single pod:  (data=16, model=16)          = 256 chips (one v5e pod)
+Multi-pod:   (pod=2, data=16, model=16)   = 512 chips
+
+The "pod" axis carries data parallelism only (params replicated across pods,
+gradients all-reduced over pod x data) — the cheapest traffic to put on the
+slow inter-pod links.  See DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    try:
+        return jax.make_mesh(shape, axes)
+    except ValueError:
+        # device count != mesh size (e.g. 512 host devices, 256-chip mesh):
+        # take a prefix — fine for dry-run lowering purposes.
+        devs = np.array(jax.devices()[:n]).reshape(shape)
+        return Mesh(devs, axes)
+
+
+def make_host_mesh(shape: tuple[int, ...] = (1, 1),
+                   axes: tuple[str, ...] = ("data", "model")) -> Mesh:
+    """Tiny mesh over whatever devices exist (CPU tests/examples)."""
+    n = int(np.prod(shape))
+    devs = np.array(jax.devices()[:n]).reshape(shape)
+    return Mesh(devs, axes)

@@ -1,0 +1,120 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [options]``.
+
+Runs real steps on whatever devices exist (CPU here; the same code path jits
+under the production mesh on TPU).  Checkpoints periodically (async), resumes
+from the latest checkpoint if present, and logs loss/throughput.
+
+This is the end-to-end example driver scaled down: examples/train_100m.py
+invokes it with a ~100M-param config for a few hundred steps.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import AsyncSaver, latest_step, restore
+from repro.configs import ARCH_IDS, get_config
+from repro.data import ShardedLoader
+from repro.models import build_model
+from repro.train import OptConfig, adamw_init, make_train_step
+
+
+def run_training(
+    cfg,
+    *,
+    steps: int = 200,
+    global_batch: int = 8,
+    seq_len: int = 128,
+    lr: float = 3e-4,
+    microbatches: int = 1,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 100,
+    log_every: int = 10,
+    seed: int = 0,
+    fail_at_step: int | None = None,   # fault-injection hook (elastic demo)
+) -> dict:
+    model = build_model(cfg)
+    opt_cfg = OptConfig(lr=lr, warmup_steps=max(steps // 20, 5),
+                        total_steps=steps)
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key)
+    opt_state = adamw_init(params)
+    start_step = 0
+
+    if ckpt_dir and latest_step(ckpt_dir) is not None:
+        (params, opt_state), start_step = restore(
+            ckpt_dir, (params, opt_state)
+        )
+        print(f"[train] resumed from step {start_step}")
+
+    step_fn = jax.jit(make_train_step(model, opt_cfg, microbatches))
+    loader = ShardedLoader(cfg.vocab, global_batch, seq_len, seed=seed)
+    saver = AsyncSaver()
+
+    losses: list[float] = []
+    t0 = time.perf_counter()
+    tokens = 0
+    try:
+        for step, batch in zip(range(start_step, steps), loader):
+            if fail_at_step is not None and step == fail_at_step:
+                raise RuntimeError(f"injected failure at step {step}")
+            jb = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt_state, metrics = step_fn(params, opt_state, jb)
+            losses.append(float(metrics["loss"]))
+            tokens += global_batch * seq_len
+            if log_every and step % log_every == 0:
+                dt = time.perf_counter() - t0
+                print(
+                    f"[train] step={step} loss={losses[-1]:.4f} "
+                    f"lr={float(metrics['lr']):.2e} "
+                    f"gnorm={float(metrics['grad_norm']):.3f} "
+                    f"tok/s={tokens / max(dt, 1e-9):.0f}",
+                    flush=True,
+                )
+            if ckpt_dir and ckpt_every and (step + 1) % ckpt_every == 0:
+                saver.save(ckpt_dir, step + 1, (params, opt_state))
+    finally:
+        loader.close()
+        saver.wait()
+    if ckpt_dir:
+        saver.save(ckpt_dir, steps, (params, opt_state))
+        saver.wait()
+    return {
+        "losses": losses,
+        "final_loss": losses[-1] if losses else float("nan"),
+        "params": params,
+        "steps_run": len(losses),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    out = run_training(
+        cfg, steps=args.steps, global_batch=args.global_batch,
+        seq_len=args.seq_len, lr=args.lr, microbatches=args.microbatches,
+        ckpt_dir=args.ckpt_dir, seed=args.seed,
+    )
+    print(f"[train] done: {out['steps_run']} steps, "
+          f"final loss {out['final_loss']:.4f} "
+          f"(ln V = {np.log(cfg.vocab):.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""repro.models — the architecture zoo for the assigned pool.
+
+Families: dense GQA (phi3/qwen3/gemma2/internlm2), MoE (qwen3-moe, granite),
+SSM (mamba2), hybrid (jamba), encoder-decoder (whisper), VLM backbone
+(qwen2-vl).  All share one pure-function parameter-dict style and one Model
+API (api.build_model).
+"""
+from repro.models.api import Model, build_model
+from repro.models.config import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    TRAIN_4K,
+    EncoderConfig,
+    ModelConfig,
+    MoEConfig,
+    ShapeSpec,
+    SSMConfig,
+    shape_applicable,
+)
+
+__all__ = [
+    "Model", "build_model",
+    "ModelConfig", "MoEConfig", "SSMConfig", "EncoderConfig", "ShapeSpec",
+    "ALL_SHAPES", "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+    "shape_applicable",
+]

@@ -1,0 +1,116 @@
+"""Unified model API: build any assigned architecture from its ModelConfig.
+
+``Model`` wraps init / train-loss / prefill / decode behind one interface and
+produces ``input_specs`` — ShapeDtypeStruct stand-ins for every entry point x
+assigned shape cell — which is what the multi-pod dry-run lowers against
+(no allocation ever happens for the full configs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, lm
+from repro.models.config import ModelConfig, ShapeSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ----------------------------------------------------------------- init
+    def init(self, key) -> dict:
+        if self.cfg.family == "encdec":
+            return encdec.init_encdec(key, self.cfg)
+        return lm.init_lm(key, self.cfg)
+
+    # ----------------------------------------------------------------- train
+    def loss(self, params, batch: dict[str, Any]):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec.encdec_loss(
+                params, cfg, batch["frames"], batch["tokens"], batch["labels"]
+            )
+        return lm.lm_loss(
+            params, cfg, batch["tokens"], batch["labels"],
+            positions=batch.get("positions"),
+            frontend_embeds=batch.get("frontend_embeds"),
+        )
+
+    # ----------------------------------------------------------------- serve
+    def prefill(self, params, batch: dict[str, Any], max_len: int):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec.encdec_prefill(
+                params, cfg, batch["frames"], batch["tokens"], max_len
+            )
+        return lm.prefill(
+            params, cfg, batch["tokens"], max_len,
+            positions=batch.get("positions"),
+            frontend_embeds=batch.get("frontend_embeds"),
+        )
+
+    def decode_step(self, params, caches, token, pos):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec.encdec_decode_step(params, cfg, caches, token, pos)
+        return lm.decode_step(params, cfg, caches, token, pos)
+
+    def init_caches(self, batch: int, max_len: int):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return encdec.init_encdec_caches(cfg, batch, max_len)
+        return lm.init_caches(cfg, batch, max_len)
+
+    # ------------------------------------------------------------ dry-run IO
+    def param_specs(self, key=None) -> Any:
+        """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+        k = jax.random.PRNGKey(0)
+        return jax.eval_shape(self.init, k)
+
+    def input_specs(self, shape: ShapeSpec) -> dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for one assigned (shape) cell.
+
+        train   -> kwargs for ``loss``;
+        prefill -> kwargs for ``prefill``;
+        decode  -> kwargs for ``decode_step`` (incl. cache specs).
+        """
+        cfg = self.cfg
+        i32 = jnp.int32
+        B, S = shape.global_batch, shape.seq_len
+        sds = jax.ShapeDtypeStruct
+
+        if shape.kind in ("train", "prefill"):
+            batch: dict[str, Any] = {}
+            s_tok = S
+            if cfg.family == "encdec":
+                batch["frames"] = sds(
+                    (B, cfg.encoder.n_ctx, cfg.d_model), cfg.compute_dtype
+                )
+            if cfg.family == "vlm" and cfg.n_frontend_tokens:
+                s_tok = S - cfg.n_frontend_tokens
+                batch["frontend_embeds"] = sds(
+                    (B, cfg.n_frontend_tokens, cfg.d_model), cfg.compute_dtype
+                )
+                batch["positions"] = sds((3, B, S), i32)
+            batch["tokens"] = sds((B, s_tok), i32)
+            if shape.kind == "train":
+                batch["labels"] = sds((B, S), i32)
+            return {"batch": batch}
+
+        # decode: one new token against a max_len context
+        specs = {
+            "caches": jax.eval_shape(
+                lambda: self.init_caches(B, S)
+            ),
+            "token": sds((B, 1), i32),
+            "pos": sds((B,), i32),
+        }
+        return specs
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,121 @@
+"""Shared model primitives: norms, rotary embeddings (incl. M-RoPE), SwiGLU.
+
+Parameters are plain nested dicts of jnp arrays; every function is pure.
+Initialization uses truncated-normal fan-in scaling.  Sharding is applied
+from the *outside* by repro.dist (PartitionSpec trees pattern-matched on
+param paths), keeping model code mesh-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.dist.act_sharding import shard_act
+
+
+def trunc_normal(key, shape, scale: float | None = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    if len(shape) >= 2:
+        fan_in = 1
+        for d in shape[:-1]:
+            fan_in *= d
+    std = scale if scale is not None else fan_in ** -0.5
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_rms_norm(d: int) -> Array:
+    return jnp.zeros((d,), jnp.float32)  # stored as (scale - 1), gemma-style
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [B, S, H, Dh]; positions: [B, S] int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # [Dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs       # [B,S,Dh/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions3: Array, theta: float,
+                sections: tuple[int, ...]) -> Array:
+    """Multimodal RoPE (qwen2-vl): rotary dims split into (t, h, w) sections,
+    each rotated by its own position stream.
+
+    x: [B, S, H, Dh]; positions3: [3, B, S] (temporal, height, width).
+    sections: half-dim sizes per stream, sum == Dh // 2.
+    """
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                                # [Dh/2]
+    # build per-dim position by section
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections), total_repeat_length=dh // 2
+    )                                                            # [Dh/2]
+    pos = positions3.astype(jnp.float32)                         # [3,B,S]
+    pos_per_dim = pos[sec_id]                                    # [Dh/2,B,S]
+    ang = jnp.moveaxis(pos_per_dim, 0, -1) * freqs               # [B,S,Dh/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": trunc_normal(k1, (d_model, d_ff)),
+        "w_up": trunc_normal(k2, (d_model, d_ff)),
+        "w_down": trunc_normal(k3, (d_ff, d_model)),
+    }
+
+
+def mlp(params: dict, x: Array) -> Array:
+    dt = x.dtype
+    g = shard_act(x @ params["w_gate"].astype(dt), ("batch", None, "model"))
+    u = shard_act(x @ params["w_up"].astype(dt), ("batch", None, "model"))
+    return (jax.nn.silu(g) * u) @ params["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, d_model: int) -> Array:
+    return trunc_normal(key, (vocab, d_model), scale=1.0)
+
+
+def embed(table: Array, tokens: Array, dtype) -> Array:
+    return table.astype(dtype)[tokens]
+
+
+def unembed(x: Array, table_or_head: Array, softcap: float = 0.0) -> Array:
+    """x: [..., D] @ head [D, V] (or tied embed [V, D] transposed) -> logits."""
+    w = table_or_head
+    if w.shape[0] != x.shape[-1]:
+        w = w.T                                                   # tied [V,D]
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits

@@ -1,0 +1,326 @@
+"""Decoder-only LM covering dense / MoE / SSM / hybrid / VLM families.
+
+Layer stack = ``n_periods`` repetitions of a ``period``-long heterogeneous
+pattern (config.py).  The stack is a ``lax.scan`` over stacked period
+parameters — HLO size stays O(period), which keeps the 512-device dry-run
+compile tractable for 94-layer models — with optional ``jax.checkpoint``
+(remat) around each period for training memory.
+
+Cross-entropy is computed in sequence chunks (scan) so the [B, S, V] logits
+tensor is never materialized (V up to 256k in the assigned pool).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.dist.act_sharding import shard_act
+from repro.models import attention as attn
+from repro.models import layers, moe, ssm
+from repro.models.config import ModelConfig
+
+AUX_LOSS_WEIGHT = 0.01
+LOSS_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_period(key, cfg: ModelConfig) -> dict:
+    p = {}
+    keys = jax.random.split(key, cfg.period)
+    for i in range(cfg.period):
+        k_mix, k_mlp = jax.random.split(keys[i])
+        sub: dict = {"norm1": layers.init_rms_norm(cfg.d_model)}
+        if cfg.mixer_kind(i) == "attn":
+            sub["mixer"] = attn.init_attention(k_mix, cfg)
+        else:
+            sub["mixer"] = ssm.init_ssm(k_mix, cfg)
+        mk = cfg.mlp_kind(i)
+        if mk != "none":
+            sub["norm2"] = layers.init_rms_norm(cfg.d_model)
+            sub["mlp"] = (moe.init_moe(k_mlp, cfg) if mk == "moe"
+                          else layers.init_mlp(k_mlp, cfg.d_model, cfg.d_ff))
+        p[f"sub{i}"] = sub
+    return p
+
+
+def init_lm(key, cfg: ModelConfig) -> dict:
+    k_embed, k_head, k_layers = jax.random.split(key, 3)
+    params = {
+        "embed": layers.init_embed(k_embed, cfg.vocab, cfg.d_model),
+        "final_norm": layers.init_rms_norm(cfg.d_model),
+        "periods": jax.vmap(lambda k: _init_period(k, cfg))(
+            jax.random.split(k_layers, cfg.n_periods)
+        ),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = layers.trunc_normal(k_head, (cfg.d_model, cfg.vocab))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill trunk)
+# ---------------------------------------------------------------------------
+
+def _apply_period(cfg: ModelConfig, pp: dict, x: Array, positions) -> tuple[Array, Array]:
+    from jax.ad_checkpoint import checkpoint_name
+
+    aux = jnp.zeros((), jnp.float32)
+    x = shard_act(x, ("batch", "seq", None))
+    for i in range(cfg.period):
+        sub = pp[f"sub{i}"]
+        h = layers.rms_norm(x, sub["norm1"], cfg.norm_eps)
+        if cfg.mixer_kind(i) == "attn":
+            h = attn.attention(
+                sub["mixer"], cfg, h, positions,
+                causal=True, window=cfg.layer_window(i),
+            )
+        else:
+            h = ssm.ssm_apply(sub["mixer"], cfg, h, impl=cfg.attn_impl)
+        h = checkpoint_name(h, "remat_ckpt")   # skip mixer in bwd replay
+        x = x + h
+        mk = cfg.mlp_kind(i)
+        if mk != "none":
+            h = layers.rms_norm(x, sub["norm2"], cfg.norm_eps)
+            if mk == "moe":
+                h, a = moe.moe_apply(sub["mlp"], cfg, h)
+                aux = aux + a
+            else:
+                h = checkpoint_name(layers.mlp(sub["mlp"], h), "remat_ckpt")
+            x = x + h
+        x = shard_act(x, ("batch", "seq", None))
+    return x, aux
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens, frontend_embeds):
+    x = layers.embed(params["embed"], tokens, cfg.compute_dtype)
+    if cfg.family in ("vlm",) or cfg.n_frontend_tokens:
+        assert frontend_embeds is not None, f"{cfg.name} needs frontend embeds"
+        x = jnp.concatenate([frontend_embeds.astype(cfg.compute_dtype), x], axis=1)
+    return x
+
+
+def forward_hidden(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: Array,                  # [B, S_tok]
+    positions: Array | None = None, # [B, S] or [3, B, S]
+    frontend_embeds: Array | None = None,
+) -> tuple[Array, Array]:
+    """Returns (final hidden [B, S, D], aux loss)."""
+    x = shard_act(
+        _embed_inputs(params, cfg, tokens, frontend_embeds),
+        ("batch", "seq", None),
+    )
+
+    body = functools.partial(_apply_period, cfg)
+    if cfg.remat:
+        if cfg.remat_policy == "save_named":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.save_only_these_names(
+                    "remat_ckpt"),
+            )
+        else:
+            body = jax.checkpoint(body)
+
+    if cfg.scan_layers:
+        def scan_fn(carry, pp):
+            y, aux = body(pp, carry, positions)
+            return y, aux
+
+        x, auxes = jax.lax.scan(scan_fn, x, params["periods"])
+        aux = jnp.sum(auxes)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for n in range(cfg.n_periods):
+            pp = jax.tree.map(lambda a, n=n: a[n], params["periods"])
+            x, a = body(pp, x, positions)
+            aux = aux + a
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def _unembed_table(params, cfg):
+    return params["embed"] if cfg.tie_embeddings else params["head"]
+
+
+def lm_loss(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: Array,
+    labels: Array,                  # [B, S_total] (-100 = masked)
+    positions: Array | None = None,
+    frontend_embeds: Array | None = None,
+) -> Array:
+    """Mean next-token cross-entropy, computed in sequence chunks."""
+    hidden, aux = forward_hidden(params, cfg, tokens, positions, frontend_embeds)
+    B, S, D = hidden.shape
+    table = _unembed_table(params, cfg)
+
+    pad = (-S) % LOSS_CHUNK
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-100)
+    nc = (S + pad) // LOSS_CHUNK
+    hc = hidden.reshape(B, nc, LOSS_CHUNK, D).swapaxes(0, 1)
+    lc = labels.reshape(B, nc, LOSS_CHUNK).swapaxes(0, 1)
+
+    def chunk_loss(carry, inp):
+        h, l = inp
+        h = shard_act(h, ("batch", None, None))
+        logits = shard_act(
+            layers.unembed(h, table, cfg.final_softcap),         # f32 [B,C,V]
+            ("batch", None, "model"),
+        )
+        mask = l >= 0
+        lsafe = jnp.where(mask, l, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lsafe[..., None], axis=-1)[..., 0]
+        nll = jnp.where(mask, logz - gold, 0.0)
+        tot, cnt = carry
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mask)), None
+
+    body = jax.checkpoint(chunk_loss) if cfg.remat else chunk_loss
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (hc, lc)
+    )
+    return tot / jnp.maximum(cnt, 1) + AUX_LOSS_WEIGHT * aux
+
+
+def lm_logits(params, cfg, tokens, positions=None, frontend_embeds=None):
+    """Full logits (small models / examples only)."""
+    hidden, _ = forward_hidden(params, cfg, tokens, positions, frontend_embeds)
+    return layers.unembed(hidden, _unembed_table(params, cfg), cfg.final_softcap)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with per-period caches
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Stacked per-period cache pytree (attn KV + ssm conv/state slots)."""
+    dt = cfg.compute_dtype
+    caches: dict = {}
+    for i in range(cfg.period):
+        if cfg.mixer_kind(i) == "attn":
+            shape = (cfg.n_periods, batch, cfg.n_kv_heads, max_len, cfg.d_head)
+            caches[f"sub{i}"] = {
+                "k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)
+            }
+        else:
+            s = cfg.ssm
+            di = s.d_inner(cfg.d_model)
+            H = s.n_ssm_heads(cfg.d_model)
+            conv_dim = di + 2 * s.n_groups * s.d_state
+            caches[f"sub{i}"] = {
+                "conv": jnp.zeros(
+                    (cfg.n_periods, batch, s.conv_width - 1, conv_dim), dt
+                ),
+                "state": jnp.zeros(
+                    (cfg.n_periods, batch, H, s.head_dim, s.d_state), jnp.float32
+                ),
+            }
+    return caches
+
+
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    caches: dict,
+    token: Array,     # [B, 1] int32
+    pos: Array,       # [B] int32 current position
+) -> tuple[Array, dict]:
+    """One decode step: logits [B, V] + updated caches."""
+    x = layers.embed(params["embed"], token, cfg.compute_dtype)  # [B,1,D]
+
+    def period_step(x, inp):
+        pp, cache_p = inp
+        new_cache = {}
+        for i in range(cfg.period):
+            sub = pp[f"sub{i}"]
+            h = layers.rms_norm(x, sub["norm1"], cfg.norm_eps)
+            if cfg.mixer_kind(i) == "attn":
+                h, (kc, vc) = attn.attention_decode(
+                    sub["mixer"], cfg, h,
+                    cache_p[f"sub{i}"]["k"], cache_p[f"sub{i}"]["v"], pos,
+                    window=cfg.layer_window(i),
+                )
+                new_cache[f"sub{i}"] = {"k": kc, "v": vc}
+            else:
+                h, conv_s, ssm_s = ssm.ssm_decode(
+                    sub["mixer"], cfg, h,
+                    cache_p[f"sub{i}"]["conv"], cache_p[f"sub{i}"]["state"],
+                )
+                new_cache[f"sub{i}"] = {"conv": conv_s, "state": ssm_s}
+            x = x + h
+            mk = cfg.mlp_kind(i)
+            if mk != "none":
+                h = layers.rms_norm(x, sub["norm2"], cfg.norm_eps)
+                if mk == "moe":
+                    h, _ = moe.moe_apply(sub["mlp"], cfg, h)
+                else:
+                    h = layers.mlp(sub["mlp"], h)
+                x = x + h
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(period_step, x, (params["periods"], caches))
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.unembed(x[:, 0], _unembed_table(params, cfg), cfg.final_softcap)
+    return logits, new_caches
+
+
+def prefill(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: Array,                  # [B, S]
+    max_len: int,
+    positions: Array | None = None,
+    frontend_embeds: Array | None = None,
+) -> tuple[Array, dict]:
+    """Process a prompt, producing last-position logits + filled caches."""
+    x = _embed_inputs(params, cfg, tokens, frontend_embeds)
+    B, S, D = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def period_fn(x, pp):
+        cache_out = {}
+        for i in range(cfg.period):
+            sub = pp[f"sub{i}"]
+            h = layers.rms_norm(x, sub["norm1"], cfg.norm_eps)
+            if cfg.mixer_kind(i) == "attn":
+                h, (kT, vT) = attn.attention_prefill(
+                    sub["mixer"], cfg, h, positions, window=cfg.layer_window(i)
+                )
+                pad = max_len - S
+                cache_out[f"sub{i}"] = {
+                    "k": jnp.pad(kT, ((0, 0), (0, 0), (0, pad), (0, 0))),
+                    "v": jnp.pad(vT, ((0, 0), (0, 0), (0, pad), (0, 0))),
+                }
+            else:
+                h, conv_s, ssm_s = ssm.ssm_prefill(sub["mixer"], cfg, h)
+                cache_out[f"sub{i}"] = {"conv": conv_s, "state": ssm_s}
+            x = x + h
+            mk = cfg.mlp_kind(i)
+            if mk != "none":
+                h = layers.rms_norm(x, sub["norm2"], cfg.norm_eps)
+                if mk == "moe":
+                    h, _ = moe.moe_apply(sub["mlp"], cfg, h)
+                else:
+                    h = layers.mlp(sub["mlp"], h)
+                x = x + h
+        return x, cache_out
+
+    body = jax.checkpoint(period_fn) if cfg.remat else period_fn
+    x, caches = jax.lax.scan(body, x, params["periods"])
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.unembed(
+        x[:, -1], _unembed_table(params, cfg), cfg.final_softcap
+    )
+    return logits, caches

@@ -1,0 +1,236 @@
+"""Mixture-of-Experts with top-k routing, capacity bound, and explicit EP.
+
+Two execution paths with identical semantics (tests assert equivalence):
+
+* **local** (no mesh context): sort-based dispatch on one device — the
+  reference implementation and the CPU smoke/test path.
+
+* **shard_map EP** (active ``activation_shardings`` context): the TPU-native
+  layout.  Tokens are sharded over the batch axes and *replicated over
+  "model"*; experts are sharded E-over-"model" (EP) and F-over-"data", so
+  expert weights are 256-way sharded at rest.  Two interchangeable
+  communication schedules, chosen statically by payload volume:
+
+  - **token-gather** (prefill/decode: few tokens): all-gather (data) the
+    [E_loc, C_d, D] dispatch buffers, run the FFN with F-sharded weights,
+    psum_scatter (data) the partial outputs back to their owning shard.
+  - **weight-gather** (training: many tokens): all-gather (data) the
+    E_loc expert weights instead (ZeRO-3-style transient gather), keep every
+    token local — zero dispatch communication. Measured on
+    qwen3-moe x train_4k this is ~5x less traffic (302 MB vs 2.7 GB per
+    layer-device); see EXPERIMENTS.md §Perf.
+
+  Both end with a psum over "model" (the expert columns). GSPMD cannot infer
+  either schedule from a global scatter/gather formulation (measured: it
+  replicates the dispatch and emits 26 TB of all-reduce per step) — this is
+  the framework's hardware-adaptation of expert parallelism (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import act_sharding
+from repro.models import layers
+
+
+def init_moe(key, cfg) -> dict:
+    m = cfg.moe
+    D = cfg.d_model
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    E, F = m.n_experts, m.d_ff
+    return {
+        "router": layers.trunc_normal(kr, (D, E)),
+        "w_gate": layers.trunc_normal(k1, (E, D, F)),
+        "w_up": layers.trunc_normal(k2, (E, D, F)),
+        "w_down": layers.trunc_normal(k3, (E, F, D)),
+    }
+
+
+def _capacity(n_tokens: int, n_experts: int, top_k: int, factor: float) -> int:
+    cap = int(n_tokens * top_k / n_experts * factor) + 1
+    return max(8, ((cap + 7) // 8) * 8)  # pad to sublane multiple
+
+
+def _route(xt: Array, router: Array, E: int, K: int):
+    """Shared router math: (gates [T,K], experts [T,K], me [E], ce [E]).
+
+    aux = E * sum(me * ce) — callers combine AFTER averaging me/ce over all
+    token shards (mean-of-products != product-of-means)."""
+    logits = xt.astype(jnp.float32) @ router.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=1),
+        axis=0,
+    )
+    return gate_vals, expert_ids, me, ce
+
+
+def _dispatch_slots(expert_ids_flat: Array, n_segments: int, cap: int):
+    """FCFS slot assignment within each expert (stable sort + prefix count)."""
+    order = jnp.argsort(expert_ids_flat, stable=True)
+    e_sorted = expert_ids_flat[order]
+    ones = jnp.ones_like(e_sorted, jnp.int32)
+    start = jnp.zeros((n_segments + 2,), jnp.int32).at[
+        jnp.clip(e_sorted, 0, n_segments) + 1
+    ].add(ones)
+    offsets = jnp.cumsum(start)[:-1]
+    slot = jnp.arange(e_sorted.shape[0]) - offsets[jnp.clip(e_sorted, 0, n_segments)]
+    keep = (slot < cap) & (e_sorted < n_segments)
+    return order, e_sorted, slot, keep
+
+
+def _expert_ffn(params, xe: Array, dt) -> Array:
+    g = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"].astype(dt))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                      params["w_down"].astype(dt))
+
+
+def _moe_local(params: dict, cfg, x: Array) -> tuple[Array, Array]:
+    """Single-device reference path."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    E, K = m.n_experts, m.top_k
+    xt = x.reshape(T, D)
+    dt = x.dtype
+
+    gate_vals, expert_ids, me, ce = _route(xt, params["router"], E, K)
+    aux = E * jnp.sum(me * ce)
+    cap = _capacity(T, E, K, m.capacity_factor)
+    flat_e = expert_ids.reshape(T * K)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    flat_g = gate_vals.reshape(T * K)
+    order, e_sorted, slot, keep = _dispatch_slots(flat_e, E, cap)
+    t_sorted = flat_t[order]
+    g_sorted = flat_g[order]
+    slot_c = jnp.where(keep, slot, 0)
+    e_safe = jnp.clip(e_sorted, 0, E - 1)
+
+    xe = jnp.zeros((E, cap, D), dt).at[e_safe, slot_c].add(
+        jnp.where(keep[:, None], xt[t_sorted], 0).astype(dt)
+    )
+    ye = _expert_ffn(params, xe, dt)
+    contrib = ye[e_safe, slot_c] * (g_sorted * keep)[:, None].astype(dt)
+    out = jnp.zeros((T, D), dt).at[t_sorted].add(contrib)
+    return out.reshape(B, S, D), aux
+
+
+def _moe_shard_map(params: dict, cfg, x: Array, state) -> tuple[Array, Array]:
+    """Explicit EP schedule under shard_map (see module docstring)."""
+    mesh, rules, seq_par = state
+    if rules.tp is None:                     # fsdp strategy: no EP columns
+        return _moe_local(params, cfg, x)
+    m = cfg.moe
+    tp = rules.tp
+    batch_axes = rules.batch                       # ("data",) or ("pod","data")
+    ntp = mesh.shape[tp]
+    ndp = 1
+    for a in batch_axes:
+        ndp *= mesh.shape[a]
+    B, S, D = x.shape
+    E, K = m.n_experts, m.top_k
+    if E % ntp != 0 or B % ndp != 0:
+        return _moe_local(params, cfg, x)          # fallback: let GSPMD cope
+    E_loc = E // ntp
+    T_loc = (B // ndp) * S
+    C_d = _capacity(T_loc, E, K, m.capacity_factor)
+    dt = x.dtype
+    bspec = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    # under sequence parallelism the residual stream is S-sharded over tp:
+    # emit the combine as a reduce-scatter straight into that layout instead
+    # of a psum followed by a re-shard (halves the combine traffic)
+    sp_out = bool(seq_par) and S % ntp == 0
+
+    def local_fn(x_loc, router, wg, wu, wd):
+        B_loc = x_loc.shape[0]
+        xt = x_loc.reshape(B_loc * S, D)
+        gate_vals, expert_ids, me, ce = _route(xt, router, E, K)
+        me = jax.lax.pmean(me, batch_axes)
+        ce = jax.lax.pmean(ce, batch_axes)
+        aux = E * jnp.sum(me * ce)
+
+        mcol = jax.lax.axis_index(tp)
+        flat_e = expert_ids.reshape(-1) - mcol * E_loc      # local expert id
+        flat_e = jnp.where((flat_e >= 0) & (flat_e < E_loc), flat_e, E_loc)
+        flat_t = jnp.repeat(jnp.arange(T_loc), K)
+        flat_g = gate_vals.reshape(-1)
+        order, e_sorted, slot, keep = _dispatch_slots(flat_e, E_loc, C_d)
+        t_sorted = flat_t[order]
+        g_sorted = flat_g[order]
+        slot_c = jnp.where(keep, slot, 0)
+        e_safe = jnp.clip(e_sorted, 0, E_loc - 1)
+
+        # dispatch buffer for MY experts from MY tokens (no comm: tokens are
+        # replicated over the model axis)
+        xe = jnp.zeros((E_loc, C_d, D), dt).at[e_safe, slot_c].add(
+            jnp.where(keep[:, None], xt[t_sorted], 0).astype(dt)
+        )
+
+        # choose the cheaper collective payload (see module docstring)
+        token_bytes = E_loc * C_d * ndp * D
+        weight_bytes = 3 * E_loc * D * (m.d_ff // ndp) * ndp
+        if weight_bytes < token_bytes:
+            # weight-gather schedule: tokens stay local
+            wg_f = jax.lax.all_gather(wg, batch_axes, axis=2, tiled=True)
+            wu_f = jax.lax.all_gather(wu, batch_axes, axis=2, tiled=True)
+            wd_f = jax.lax.all_gather(wd, batch_axes, axis=1, tiled=True)
+            g = jnp.einsum("ecd,edf->ecf", xe, wg_f.astype(dt))
+            u = jnp.einsum("ecd,edf->ecf", xe, wu_f.astype(dt))
+            ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                            wd_f.astype(dt)).astype(dt)     # [E_loc, C_d, D]
+        else:
+            # token-gather schedule: weights stay local (F-sharded)
+            xe_all = jax.lax.all_gather(xe, batch_axes, axis=1, tiled=True)
+            g = jnp.einsum("ecd,edf->ecf", xe_all, wg.astype(dt))
+            u = jnp.einsum("ecd,edf->ecf", xe_all, wu.astype(dt))
+            y_part = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                                wd.astype(dt)).astype(dt)   # bf16 RS
+            # reduce the F-contraction AND scatter token slots back to their
+            # owning data shard in one collective
+            ye = jax.lax.psum_scatter(
+                y_part, batch_axes, scatter_dimension=1, tiled=True
+            )                                               # [E_loc, C_d, D]
+
+        contrib = ye[e_safe, slot_c] * (g_sorted * keep)[:, None].astype(dt)
+        out = jnp.zeros((T_loc, D), dt).at[t_sorted].add(contrib)
+        out = out.reshape(B_loc, S, D)
+        if sp_out:
+            out = jax.lax.psum_scatter(                     # sum expert columns
+                out, tp, scatter_dimension=1, tiled=True    # -> [B, S/ntp, D]
+            )
+        else:
+            out = jax.lax.psum(out, tp)                     # sum expert columns
+        from jax.ad_checkpoint import checkpoint_name
+        out = checkpoint_name(out, "remat_ckpt")
+        return out, aux
+
+    out, aux = jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(
+            P(bspec, None, None),
+            P(None, None),
+            P(tp, None, "data"),
+            P(tp, None, "data"),
+            P(tp, "data", None),
+        ),
+        out_specs=(P(bspec, tp if sp_out else None, None), P()),
+    )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
+    return out, aux
+
+
+def moe_apply(params: dict, cfg, x: Array) -> tuple[Array, Array]:
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar)."""
+    state = act_sharding.current_state()
+    if state is not None:
+        return _moe_shard_map(params, cfg, x, state)
+    return _moe_local(params, cfg, x)

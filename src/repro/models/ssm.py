@@ -1,0 +1,224 @@
+"""Mamba2 block (state-space duality): projections, causal conv, SSD core.
+
+Train/prefill: chunk-parallel SSD — ``kernels.ref.ssd_chunked_ref`` on the
+XLA path or the Pallas ``ssd_scan`` kernel on TPU.  Decode: O(1) recurrent
+update carrying (conv window, SSM state) per layer.
+
+Layout per block (following Mamba2):
+  separate projections D -> z (d_inner), x (d_inner), B (G*N), C (G*N), dt (H)
+  causal depthwise conv (width w) over the x/B/C channels
+  SSD over H heads of head_dim P = d_inner / H
+  gated RMSNorm (z branch) -> out_proj: d_inner -> D
+
+Sharding note (EXPERIMENTS.md §Perf, mamba2 x prefill finding): Mamba2's
+reference fuses z/x/B/C/dt into ONE in_proj whose output is then sliced.
+Under tensor parallelism the slice boundaries (1536/3072/3200/...) don't
+align with the model-axis shard boundaries, and GSPMD materializes halo
+collective-permutes over the full [B, S, *] activations (~320 GB/step
+measured).  Keeping the projections as separate weights makes every tensor
+individually shard-aligned — same math, zero permutes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.dist.act_sharding import shard_act
+from repro.models import layers
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    H = s.n_ssm_heads(cfg.d_model)
+    return s, di, H
+
+
+def init_ssm(key, cfg) -> dict:
+    s, di, H = _dims(cfg)
+    G, N = s.n_groups, s.d_state
+    gn = G * N
+    ks = jax.random.split(key, 7)
+    return {
+        "w_z": layers.trunc_normal(ks[0], (cfg.d_model, di)),
+        "w_x": layers.trunc_normal(ks[1], (cfg.d_model, di)),
+        "w_B": layers.trunc_normal(ks[2], (cfg.d_model, gn)),
+        "w_C": layers.trunc_normal(ks[3], (cfg.d_model, gn)),
+        "w_dt": layers.trunc_normal(ks[4], (cfg.d_model, H)),
+        "conv_w": layers.trunc_normal(ks[5], (s.conv_width, di + 2 * gn),
+                                      scale=0.5),
+        "conv_b": jnp.zeros((di + 2 * gn,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01, jnp.float32))),
+        "norm": layers.init_rms_norm(di),
+        "out_proj": layers.trunc_normal(ks[6], (di, cfg.d_model)),
+    }
+
+
+def _project(params: dict, cfg, x: Array):
+    """Separate shard-aligned projections -> (z, x, B, C, dt_raw)."""
+    dt_ = x.dtype
+    z = shard_act(x @ params["w_z"].astype(dt_), ("batch", None, "model"))
+    xs = shard_act(x @ params["w_x"].astype(dt_), ("batch", None, "model"))
+    bs = shard_act(x @ params["w_B"].astype(dt_), ("batch", None, "model"))
+    cs = shard_act(x @ params["w_C"].astype(dt_), ("batch", None, "model"))
+    dt_raw = x @ params["w_dt"].astype(dt_)
+    return z, xs, bs, cs, dt_raw
+
+
+def _conv_parts(cfg):
+    s, di, H = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    return di, gn
+
+
+def _causal_conv_parts(cfg, params, xs, bs, cs):
+    """Depthwise causal conv applied per part (weights stored concatenated
+    [W, di+2gn]; slicing WEIGHTS is free — they're tiny and replicated on
+    the sliced axis boundary-compatible shards)."""
+    di, gn = _conv_parts(cfg)
+    w, b = params["conv_w"], params["conv_b"]
+    xs = _causal_conv(xs, w[:, :di], b[:di])
+    bs = _causal_conv(bs, w[:, di:di + gn], b[di:di + gn])
+    cs = _causal_conv(cs, w[:, di + gn:], b[di + gn:])
+    return xs, bs, cs
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over time. xbc: [B, S, C]; w: [W, C]."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(W):  # W is tiny (4); unrolled taps fuse into one op
+        out = out + pad[:, i : i + xbc.shape[1]] * w[i].astype(xbc.dtype)
+    return jax.nn.silu(out + b.astype(xbc.dtype))
+
+
+def ssm_apply(params: dict, cfg, x: Array, *, impl: str = "xla") -> Array:
+    """Train/prefill path. x: [B, S, D] -> [B, S, D]."""
+    s, di, H = _dims(cfg)
+    G, N, P = s.n_groups, s.d_state, s.head_dim
+    B, S, D = x.shape
+    dt_ = x.dtype
+
+    z, xs, bs, cs, dt_raw = _project(params, cfg, x)
+    xs, bs, cs = _causal_conv_parts(cfg, params, xs, bs, cs)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"][None, None]
+    )                                                     # [B,S,H]
+    A = -jnp.exp(params["A_log"])                         # [H] negative
+    xh = xs.reshape(B, S, H, P)
+    bh = bs.reshape(B, S, G, N)
+    ch = cs.reshape(B, S, G, N)
+
+    if impl == "pallas":
+        from repro.kernels import ops
+
+        y = ops.ssd_scan(xh, dt, A, bh, ch, params["D"], chunk=s.chunk)
+    else:
+        from repro.kernels import ref
+
+        y = ref.ssd_chunked_ref(xh, dt, A, bh, ch, params["D"], chunk=min(s.chunk, S))
+
+    y = y.reshape(B, S, di)
+    y = layers.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return y @ params["out_proj"].astype(dt_)
+
+
+def ssm_prefill(params: dict, cfg, x: Array):
+    """Prefill: outputs + (conv tail window, final SSM state) to seed decode."""
+    s, di, H = _dims(cfg)
+    G, N, P = s.n_groups, s.d_state, s.head_dim
+    B, S, D = x.shape
+    dt_ = x.dtype
+
+    z, xs_raw, bs_raw, cs_raw, dt_raw = _project(params, cfg, x)
+    xs, bs, cs = _causal_conv_parts(cfg, params, xs_raw, bs_raw, cs_raw)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"][None, None]
+    )
+    A = -jnp.exp(params["A_log"])
+    from repro.kernels import ref
+
+    pad = (-S) % s.chunk
+    chunk = min(s.chunk, S + pad)
+    if pad:
+        xs_p = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        bs_p = jnp.pad(bs, ((0, 0), (0, pad), (0, 0)))
+        cs_p = jnp.pad(cs, ((0, 0), (0, pad), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # dt=0 -> identity
+    else:
+        xs_p, bs_p, cs_p, dt_p = xs, bs, cs, dt
+    y, h_final = ref.ssd_chunked_ref(
+        xs_p.reshape(B, S + pad, H, P), dt_p,
+        A, bs_p.reshape(B, S + pad, G, N), cs_p.reshape(B, S + pad, G, N),
+        params["D"], chunk=chunk, return_state=True,
+    )
+    y = y[:, :S].reshape(B, S, di)
+    y = layers.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dt_)
+
+    # conv tail: last (W-1) *pre-activation* conv inputs (x|B|C concatenated)
+    W = s.conv_width
+    xbc_raw = jnp.concatenate([xs_raw, bs_raw, cs_raw], axis=-1)
+    tail = jnp.pad(xbc_raw, ((0, 0), (W - 1, 0), (0, 0)))[:, -(W - 1):]
+    return out, tail.astype(dt_), h_final
+
+
+# ---------------------------------------------------------------------------
+# decode (recurrent) path
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg, batch: int, n_ssm_layers: int, dtype):
+    s, di, H = _dims(cfg)
+    G, N, P = s.n_groups, s.d_state, s.head_dim
+    conv_dim = di + 2 * G * N
+    return {
+        "conv": jnp.zeros((n_ssm_layers, batch, s.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((n_ssm_layers, batch, H, P, N), jnp.float32),
+    }
+
+
+def ssm_decode(params: dict, cfg, x: Array, conv_state: Array, ssm_state: Array):
+    """One-token recurrent step.
+
+    x: [B, 1, D]; conv_state: [B, W-1, conv_dim]; ssm_state: [B, H, P, N].
+    """
+    s, di, H = _dims(cfg)
+    G, N, P = s.n_groups, s.d_state, s.head_dim
+    gn = G * N
+    B = x.shape[0]
+    dt_ = x.dtype
+
+    z, xs, bs, cs, dt_raw = _project(params, cfg, x)
+    z, xs, bs, cs, dt_raw = (t[:, 0] for t in (z, xs, bs, cs, dt_raw))
+    xbc = jnp.concatenate([xs, bs, cs], axis=-1)          # [B, conv_dim]
+
+    # conv: window = (state, new) -> output tap
+    win = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # [B,W,C]
+    w = params["conv_w"].astype(dt_)                      # [W, C]
+    conv_out = jnp.einsum("bwc,wc->bc", win, w) + params["conv_b"].astype(dt_)
+    conv_out = jax.nn.silu(conv_out)
+    new_conv_state = win[:, 1:]
+
+    xs = conv_out[:, :di]
+    bs = conv_out[:, di:di + gn]
+    cs = conv_out[:, di + gn:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None])
+    A = -jnp.exp(params["A_log"])                         # [H]
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    bh = jnp.repeat(bs.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    ch = jnp.repeat(cs.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+
+    decay = jnp.exp(dt * A)[..., None, None]              # [B,H,1,1]
+    upd = (dt[..., None, None] * xh[..., None]) * bh[:, :, None, :]
+    new_ssm = decay * ssm_state + upd                     # [B,H,P,N]
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm, ch)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(B, 1, di).astype(dt_)
+    y = layers.rms_norm(y * jax.nn.silu(z[:, None]), params["norm"], cfg.norm_eps)
+    return y @ params["out_proj"].astype(dt_), new_conv_state, new_ssm

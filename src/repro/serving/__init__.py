@@ -1,0 +1,5 @@
+"""repro.serving — continuous batching driven by the CloudSim policy engine."""
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import Request, SlotScheduler, choose_policy, queue_scenario
+
+__all__ = ["ServingEngine", "Request", "SlotScheduler", "choose_policy", "queue_scenario"]

@@ -1,0 +1,8 @@
+"""repro.train — optimizer + microbatched train step (built from scratch)."""
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update, cosine_schedule, global_norm
+from repro.train.step import init_train_state, make_train_step
+
+__all__ = [
+    "OptConfig", "adamw_init", "adamw_update", "cosine_schedule",
+    "global_norm", "init_train_state", "make_train_step",
+]

@@ -1,0 +1,100 @@
+"""AdamW + warmup-cosine schedule + global-norm clipping, from scratch.
+
+Optimizer state mirrors the parameter tree (two moment trees), so the FSDP
+PartitionSpecs derived for params apply verbatim to the state (ZeRO-style
+sharded optimizer for free under GSPMD).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def cosine_schedule(cfg: OptConfig) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = cfg.lr * step / jnp.maximum(cfg.warmup_steps, 1)
+        t = (step - cfg.warmup_steps) / jnp.maximum(
+            cfg.total_steps - cfg.warmup_steps, 1
+        )
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t)
+        )
+        return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+    return lr
+
+
+def adamw_init(params: Any) -> dict:
+    zeros = lambda t: jax.tree.map(jnp.zeros_like, t)
+    return {
+        "mu": zeros(params),
+        "nu": zeros(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def _decay_mask(path) -> bool:
+    """Weight decay on matrices only (no norms / biases / scalars)."""
+    last = path[-1]
+    name = getattr(last, "key", getattr(last, "name", ""))
+    return "norm" not in str(name) and not str(name).endswith("_b")
+
+
+def adamw_update(
+    grads: Any, state: dict, params: Any, cfg: OptConfig
+) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    sched = cosine_schedule(cfg)
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = sched(state["step"])
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu / b1c
+        nhat = nu / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if _decay_mask(path):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat = jax.tree_util.tree_map_with_path(
+        lambda path, p, g, mu, nu: upd(path, p, g, mu, nu),
+        params, grads, state["mu"], state["nu"],
+    )
+    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}, metrics

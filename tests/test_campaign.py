@@ -1,0 +1,53 @@
+"""Campaign API: trace variant + sharded execution (4-device subprocess)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SPACE_SHARED, TIME_SHARED, scenarios, simulate_trace
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_simulate_trace_progress_curves():
+    """Fig 9/10-style progress sampling: fractions are monotone in time and
+    reach 1.0 for finished work."""
+    scn = scenarios.fig9_10_scenario(SPACE_SHARED, n_hosts=50, n_vms=5,
+                                     n_groups=3)
+    ts = jnp.asarray(np.arange(0.0, 4000.0, 250.0, dtype=np.float32))
+    res, prog = simulate_trace(scn, ts)
+    prog = np.array(prog)
+    assert prog.shape == (len(ts), scn.cloudlets.n_cloudlets)
+    assert (np.diff(prog, axis=0) >= -1e-5).all()          # monotone
+    assert np.allclose(prog[-1][np.array(res.finish_t) <= 3750.0], 1.0,
+                       atol=1e-3)
+    # first group (submit 0): progress at sample t is t/1200 (dedicated cores)
+    first = np.array(scn.cloudlets.submit_t) == 0.0
+    t_idx = int(np.searchsorted(np.array(ts), 750.0))
+    assert np.allclose(prog[t_idx][first], 750.0 / 1200.0, atol=0.02)
+
+
+def test_run_campaign_sharded_subprocess():
+    code = """
+import jax, numpy as np
+from jax.sharding import Mesh
+from repro.core import scenarios, stack_scenarios, run_campaign, run_campaign_sharded
+
+scns = [scenarios.fig4_scenario(hp, vp) for hp in (0,1) for vp in (0,1)] * 2
+batched = stack_scenarios(scns)
+mesh = Mesh(np.array(jax.devices()).reshape(4, 1), ("data", "model"))
+local = run_campaign(batched)
+sharded = run_campaign_sharded(batched, mesh)
+np.testing.assert_allclose(np.array(local.finish_t), np.array(sharded.finish_t), rtol=1e-6)
+print("SHARDED_OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARDED_OK" in out.stdout

@@ -1,0 +1,61 @@
+"""Checkpoint: roundtrip, atomicity, latest discovery, async, mismatch."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import AsyncSaver, latest_step, restore, save
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "w": jax.random.normal(k, (4, 8)),
+        "nested": {"b": jnp.arange(5, dtype=jnp.float32),
+                   "s": jnp.asarray(3, jnp.int32)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 7, t)
+    out, step = restore(str(tmp_path), jax.tree.map(np.zeros_like, t))
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+
+
+def test_latest_discovery(tmp_path):
+    assert latest_step(str(tmp_path)) is None
+    for s in (3, 10, 5):
+        save(str(tmp_path), s, _tree(s))
+    assert latest_step(str(tmp_path)) == 10
+    out, step = restore(str(tmp_path), _tree())
+    assert step == 10
+    np.testing.assert_array_equal(np.array(out["w"]),
+                                  np.array(_tree(10)["w"]))
+
+
+def test_async_save(tmp_path):
+    s = AsyncSaver()
+    t = _tree(1)
+    s.save(str(tmp_path), 1, t)
+    s.save(str(tmp_path), 2, t)  # waits for the first
+    s.wait()
+    assert latest_step(str(tmp_path)) == 2
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    save(str(tmp_path), 1, _tree())
+    bad = _tree()
+    bad["w"] = jnp.zeros((2, 2))
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), bad)
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """tmp dirs never count as checkpoints (atomic publish)."""
+    os.makedirs(tmp_path / ".tmp_x" , exist_ok=True)
+    assert latest_step(str(tmp_path)) is None

@@ -1,0 +1,45 @@
+"""Data pipeline: determinism, host disjointness, learnable structure."""
+import numpy as np
+
+from repro.data import MarkovSource, ShardedLoader
+
+
+def test_deterministic_stream():
+    a = ShardedLoader(100, 4, 16, seed=5)
+    b = ShardedLoader(100, 4, 16, seed=5)
+    for _ in range(3):
+        x, y = next(a), next(b)
+        np.testing.assert_array_equal(x["tokens"], y["tokens"])
+        np.testing.assert_array_equal(x["labels"], y["labels"])
+    a.close(); b.close()
+
+
+def test_hosts_disjoint_batches():
+    a = ShardedLoader(100, 8, 16, host_id=0, n_hosts=2, seed=5)
+    b = ShardedLoader(100, 8, 16, host_id=1, n_hosts=2, seed=5)
+    xa, xb = next(a), next(b)
+    assert xa["tokens"].shape == (4, 16)
+    assert not np.array_equal(xa["tokens"], xb["tokens"])
+    a.close(); b.close()
+
+
+def test_labels_are_shifted_tokens():
+    l = ShardedLoader(50, 2, 10, seed=0)
+    b = next(l)
+    l.close()
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_markov_structure_learnable():
+    """successor distribution concentrated (low entropy vs uniform)."""
+    src = MarkovSource(64, seed=0)
+    rng = np.random.default_rng(0)
+    seq = src.sample(rng, 64, 128)
+    # P(next in successor set) >> chance
+    hits = 0
+    total = 0
+    for row in seq:
+        for t in range(len(row) - 1):
+            total += 1
+            hits += row[t + 1] in src.succ[row[t]]
+    assert hits / total > 0.8

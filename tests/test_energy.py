@@ -1,0 +1,77 @@
+"""Energy + topology models (the paper's stated future work, implemented)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scenarios, simulate
+from repro.core.energy import PowerModel, Topology
+
+
+def _with_models(fed=True, lat=5.0, bw=50.0):
+    scn = scenarios.table1_scenario(fed)
+    return scn.replace(
+        power=PowerModel.uniform(3),
+        topology=Topology.uniform(3, latency_s=lat, bw_mbps=bw),
+    )
+
+
+def test_energy_bounded_by_power_envelope():
+    scn = _with_models()
+    res = jax.jit(simulate)(scn)
+    n_hosts = int(np.sum(np.array(scn.hosts.exists)))
+    makespan = float(res.end_t)
+    total = float(np.sum(np.array(res.energy_j)))
+    idle_floor = n_hosts * 93.0 * makespan
+    peak_ceil = n_hosts * 135.0 * makespan
+    assert idle_floor * 0.99 <= total <= peak_ceil * 1.01
+
+
+def test_energy_zero_without_power_model():
+    res = jax.jit(simulate)(scenarios.table1_scenario(True))
+    assert float(np.sum(np.array(res.energy_j))) == 0.0
+
+
+def test_busy_dc_draws_more_than_idle_dc():
+    """DC0 hosts most of the work; per-host average power must exceed the
+    idle peers' (utilization term)."""
+    scn = _with_models()
+    res = jax.jit(simulate)(scn)
+    e = np.array(res.energy_j)
+    hosts_per_dc = np.sum(np.array(scn.hosts.exists), axis=1)
+    per_host = e / np.maximum(hosts_per_dc, 1)
+    assert per_host[0] > per_host[1]
+
+
+def test_topology_migration_delay():
+    """Higher inter-DC latency/lower bw delays migrated VMs' completions."""
+    fast = jax.jit(simulate)(_with_models(lat=1.0, bw=1000.0))
+    slow = jax.jit(simulate)(_with_models(lat=300.0, bw=5.0))
+    assert int(fast.n_migrations) == int(slow.n_migrations) == 10
+    assert float(slow.mean_turnaround) > float(fast.mean_turnaround) + 50
+
+
+def test_locality_aware_coordinator():
+    """With one distant and one nearby peer, migrations prefer the nearby
+    one (latency-penalized ranking)."""
+    scn = scenarios.table1_scenario(True)
+    lat = jnp.asarray(np.array([
+        [0.0, 1.0, 500.0],
+        [1.0, 0.0, 500.0],
+        [500.0, 500.0, 0.0],
+    ], np.float32))
+    topo = Topology(latency_s=lat, bw_mbps=jnp.full((3, 3), 100.0, jnp.float32))
+    res = jax.jit(simulate)(scn.replace(topology=topo))
+    placed = np.array(res.vm_dc)[np.array(res.vm_placed)]
+    counts = np.bincount(placed, minlength=3)
+    # DC1 (near) absorbs its 5 slots before DC2 (far) is touched
+    assert counts[1] >= counts[2]
+    assert int(res.n_migrations) == 10
+
+
+def test_from_coordinates_latency():
+    coords = np.array([[0.0, 0.0], [1800.0, 0.0], [0.0, 3600.0]])  # km
+    topo = Topology.from_coordinates(coords)
+    lat = np.array(topo.latency_s)
+    assert lat[0, 0] == 0.0
+    assert np.isclose(lat[0, 1], 1.8e6 / (0.6 * 3e8), rtol=1e-5)  # 10 ms
+    assert lat[0, 2] > lat[0, 1]

@@ -1,0 +1,132 @@
+"""Engine invariants — property-based (hypothesis) + determinism/vmap."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SPACE_SHARED,
+    TIME_SHARED,
+    Scenario,
+    scenarios,
+    simulate,
+    stack_scenarios,
+    run_campaign,
+)
+
+
+def _random_scenario(rng: np.random.Generator, hp, vp) -> Scenario:
+    n_hosts = int(rng.integers(1, 4))
+    n_vms = int(rng.integers(1, 5))
+    n_extra = int(rng.integers(0, 6))
+    hosts = scenarios.uniform_hosts(
+        1, n_hosts, cores=int(rng.integers(1, 3)),
+        mips=float(rng.uniform(10, 200)), ram_mb=4096.0)
+    vms = scenarios.uniform_vms(
+        n_vms, cores=1, mips=float(rng.uniform(10, 200)), ram_mb=256.0)
+    # every VM gets >=1 cloudlet: an idle VM legitimately holds its cores
+    # forever under space-sharing, starving later VMs (Fig 4a semantics)
+    n_cl = n_vms + n_extra
+    cl_vm = np.concatenate([np.arange(n_vms),
+                            rng.integers(0, n_vms, n_extra)])
+    cls = scenarios.make_cloudlets(
+        cl_vm,
+        rng.uniform(100, 5000, n_cl),
+        rng.uniform(0, 50, n_cl),
+        input_mb=0.0, output_mb=0.0)
+    return Scenario(
+        hosts=hosts, vms=vms, cloudlets=cls,
+        market=scenarios.uniform_market(1),
+        policy=scenarios.make_policy(host_policy=hp, vm_policy=vp,
+                                     horizon=1e6))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    hp=st.sampled_from([SPACE_SHARED, TIME_SHARED]),
+    vp=st.sampled_from([SPACE_SHARED, TIME_SHARED]),
+)
+def test_engine_invariants(seed, hp, vp):
+    rng = np.random.default_rng(seed)
+    scn = _random_scenario(rng, hp, vp)
+    res = jax.jit(simulate)(scn)
+
+    fin = np.array(res.finish_t)
+    placed = np.array(res.vm_placed)
+    failed = np.array(res.vm_failed)
+    cl_vm = np.array(scn.cloudlets.vm)
+    submit = np.array(scn.cloudlets.submit_t)
+    length = np.array(scn.cloudlets.length_mi)
+    vmips = np.array(scn.vms.mips)
+    hmips = float(scn.hosts.mips[0, 0])
+
+    done = np.isfinite(fin) & (fin < 1e30)
+    # every cloudlet whose VM was placed must finish (work conservation:
+    # positive rates guarantee progress; horizon is generous)
+    for i in range(len(fin)):
+        if placed[cl_vm[i]]:
+            assert done[i], f"cloudlet {i} starved"
+        if failed[cl_vm[i]]:
+            assert not done[i]
+    # physics: never faster than the VM's requested per-core MIPS (the
+    # time-shared VMM is a fluid pool — CloudSim semantics — so the host
+    # per-core MIPS is not a bound, but the VM's request always is)
+    min_time = length / vmips[cl_vm]
+    assert (fin[done] >= submit[done] + min_time[done] * (1 - 1e-3) - 1.0).all()
+    # event budget respected
+    assert int(res.n_events) <= 4 * (len(fin) + len(vmips)) + 260
+
+
+def test_determinism_and_vmap_consistency():
+    rng = np.random.default_rng(7)
+    scn = _random_scenario(rng, TIME_SHARED, TIME_SHARED)
+    r1 = jax.jit(simulate)(scn)
+    r2 = jax.jit(simulate)(scn)
+    np.testing.assert_array_equal(np.array(r1.finish_t), np.array(r2.finish_t))
+
+    batched = stack_scenarios([scn, scn, scn])
+    rb = run_campaign(batched)
+    for i in range(3):
+        np.testing.assert_allclose(
+            np.array(rb.finish_t[i]), np.array(r1.finish_t), rtol=1e-6)
+
+
+def test_scale_invariance():
+    """Doubling MIPS and MI leaves completion times unchanged."""
+    rng = np.random.default_rng(3)
+    scn = _random_scenario(rng, SPACE_SHARED, TIME_SHARED)
+    scn2 = scn.replace(
+        hosts=scn.hosts.replace(mips=scn.hosts.mips * 2),
+        vms=scn.vms.replace(mips=scn.vms.mips * 2),
+        cloudlets=scn.cloudlets.replace(
+            length_mi=scn.cloudlets.length_mi * 2),
+    )
+    r1 = jax.jit(simulate)(scn)
+    r2 = jax.jit(simulate)(scn2)
+    f1, f2 = np.array(r1.finish_t), np.array(r2.finish_t)
+    done = np.isfinite(f1) & (f1 < 1e30)
+    np.testing.assert_allclose(f1[done], f2[done], rtol=1e-2)
+
+
+def test_market_accounting():
+    """RAM/storage billed at creation; CPU cost proportional to run time."""
+    scn = scenarios.fig4_scenario(SPACE_SHARED, SPACE_SHARED)
+    res = jax.jit(simulate)(scn)
+    # 2 VMs x 1024 MB x 0.05 $/MB
+    np.testing.assert_allclose(float(np.sum(res.ram_cost)), 2 * 1024 * 0.05,
+                               rtol=1e-5)
+    # cpu: 8 tasks x 400s x 3 $/s (space/space: every task runs 400s)
+    np.testing.assert_allclose(float(np.sum(res.cpu_cost)), 8 * 400 * 3.0,
+                               rtol=3e-3)
+
+
+def test_horizon_cuts_simulation():
+    scn = scenarios.fig4_scenario(SPACE_SHARED, SPACE_SHARED)
+    scn = scn.replace(policy=scn.policy.replace(
+        horizon=jnp.asarray(500.0, jnp.float32)))
+    res = jax.jit(simulate)(scn)
+    # only the first two tasks (finish at 400) complete before t=500
+    assert int(res.n_finished) == 2
+    assert float(res.end_t) <= 500.0 + 1e-3

@@ -1,0 +1,25 @@
+"""Engine end-to-end with the Pallas advance sweep (interpret mode) — the
+kernel in its production seat, not just standalone."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import SPACE_SHARED, TIME_SHARED, scenarios, simulate
+
+
+@pytest.mark.parametrize("hp,vp", [(SPACE_SHARED, SPACE_SHARED),
+                                   (TIME_SHARED, TIME_SHARED)])
+def test_pallas_sweep_matches_jnp_engine(hp, vp):
+    scn = scenarios.fig4_scenario(hp, vp)
+    res_jnp = jax.jit(simulate)(scn)
+    res_pl = jax.jit(simulate)(scn.replace(sweep_impl="pallas"))
+    np.testing.assert_allclose(
+        np.array(res_jnp.finish_t), np.array(res_pl.finish_t), rtol=1e-5)
+    assert int(res_jnp.n_events) == int(res_pl.n_events)
+
+
+def test_pallas_sweep_federation():
+    scn = scenarios.table1_scenario(True).replace(sweep_impl="pallas")
+    res = jax.jit(simulate)(scn)
+    assert int(res.n_finished) == 25
+    assert int(res.n_migrations) == 10

@@ -1,0 +1,71 @@
+"""HLO walker: trip-count weighting, dot flops, collective accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo_walk import analyze_hlo
+from repro.analysis.roofline import Roofline, analyze_walk
+from repro.analysis import memory as memest
+
+
+def _hlo(f, *specs):
+    return jax.jit(f).lower(*specs).compile().as_text()
+
+
+def test_scan_trip_count_weighting():
+    def f(x, ws):
+        def body(c, w):
+            return (c @ w) @ w.T, None
+        c, _ = jax.lax.scan(body, x, ws)
+        return c
+
+    txt = _hlo(f, jax.ShapeDtypeStruct((128, 256), jnp.float32),
+               jax.ShapeDtypeStruct((10, 256, 256), jnp.float32))
+    t = analyze_hlo(txt)
+    expect = 10 * 2 * (2 * 128 * 256 * 256)
+    np.testing.assert_allclose(t.dot_flops, expect, rtol=1e-6)
+
+
+def test_nested_scan():
+    def f(x, ws):
+        def outer(c, w):
+            def inner(ci, _):
+                return ci @ w, None
+            ci, _ = jax.lax.scan(inner, c, None, length=5)
+            return ci, None
+        c, _ = jax.lax.scan(outer, x, ws)
+        return c
+
+    txt = _hlo(f, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+               jax.ShapeDtypeStruct((3, 64, 64), jnp.float32))
+    t = analyze_hlo(txt)
+    expect = 3 * 5 * 2 * 64 * 64 * 64
+    np.testing.assert_allclose(t.dot_flops, expect, rtol=1e-6)
+
+
+def test_unrolled_matmul():
+    def f(a, b):
+        return a @ b
+
+    txt = _hlo(f, jax.ShapeDtypeStruct((32, 64), jnp.float32),
+               jax.ShapeDtypeStruct((64, 128), jnp.float32))
+    t = analyze_hlo(txt)
+    np.testing.assert_allclose(t.dot_flops, 2 * 32 * 64 * 128, rtol=1e-6)
+
+
+def test_roofline_bottleneck_logic():
+    class W:  # minimal stand-in
+        dot_flops = 197e12  # exactly 1s of compute
+        coll_counts = {"all-reduce": 1}
+        coll_raw = {"all-reduce": 1e9}
+        coll_effective = 5e9  # 0.1 s
+
+    class M:
+        traffic_bytes = 819e9 * 2  # 2 s of HBM -> memory-bound
+
+    r = analyze_walk(W(), M(), n_chips=4, model_flops=100e12)
+    assert r.bottleneck == "memory"
+    assert np.isclose(r.compute_s, 1.0)
+    assert np.isclose(r.memory_s, 2.0)
+    assert np.isclose(r.collective_s, 0.1)
+    assert np.isclose(r.step_time_s, 2.0)

@@ -1,0 +1,37 @@
+"""MoE dispatch invariants (property-based)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.moe import _capacity, _dispatch_slots
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 5000), n=st.integers(1, 200),
+       e=st.sampled_from([2, 4, 8]), cap=st.integers(1, 32))
+def test_dispatch_slots_invariants(seed, n, e, cap):
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(rng.integers(0, e + 1, n).astype(np.int32))  # e = drop
+    order, e_sorted, slot, keep = _dispatch_slots(ids, e, cap)
+    order, e_sorted = np.array(order), np.array(e_sorted)
+    slot, keep = np.array(slot), np.array(keep)
+    # sorted grouping
+    assert (np.diff(e_sorted) >= 0).all()
+    # kept slots unique per expert and < cap
+    for ex in range(e):
+        s = slot[(e_sorted == ex) & keep]
+        assert len(np.unique(s)) == len(s)
+        assert (s < cap).all() and (s >= 0).all()
+        # FCFS: kept entries are the FIRST cap entries of that expert
+        all_s = slot[e_sorted == ex]
+        assert (np.sort(s) == np.arange(len(s))).all()
+        assert len(s) == min(len(all_s), cap)
+    # overflow ids (== e) never kept
+    assert not keep[e_sorted >= e].any()
+
+
+def test_capacity_rounding():
+    assert _capacity(100, 4, 2, 1.25) % 8 == 0
+    assert _capacity(1, 128, 8, 1.0) >= 8
+    assert _capacity(16384, 128, 8, 1.25) >= 16384 * 8 * 1.25 / 128

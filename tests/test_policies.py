@@ -1,0 +1,74 @@
+"""Figure-4 scheduling semantics: analytic completion times, all 4 combos."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import SPACE_SHARED, TIME_SHARED, scenarios, simulate
+
+L = 400.0  # seconds per dedicated-core task (4000 MI / 10 MIPS)
+
+
+@pytest.mark.parametrize(
+    "hp,vp,expected",
+    [
+        # (a) space/space: VM1 t at L,2L; VM2 queued until VM1 drains
+        (SPACE_SHARED, SPACE_SHARED, [1, 1, 2, 2, 3, 3, 4, 4]),
+        # (b) space/time: VM1 all at 2L; VM2 all at 4L
+        (SPACE_SHARED, TIME_SHARED, [2, 2, 2, 2, 4, 4, 4, 4]),
+        # (c) time/space: both VMs at half speed, 2 tasks then 2 tasks
+        (TIME_SHARED, SPACE_SHARED, [2, 2, 4, 4, 2, 2, 4, 4]),
+        # (d) time/time: everything at 4L
+        (TIME_SHARED, TIME_SHARED, [4] * 8),
+    ],
+    ids=["a-space/space", "b-space/time", "c-time/space", "d-time/time"],
+)
+def test_fig4_completion_times(hp, vp, expected):
+    scn = scenarios.fig4_scenario(hp, vp)
+    res = jax.jit(simulate)(scn)
+    finish = np.array(res.finish_t)
+    assert int(res.n_finished) == 8
+    np.testing.assert_allclose(finish, np.array(expected) * L, rtol=3e-3)
+
+
+def test_policy_equivalence_unit_load():
+    """1 task per VM, 1 single-core VM per host: all four policies agree."""
+    import jax.numpy as jnp
+
+    ref = None
+    for hp in (SPACE_SHARED, TIME_SHARED):
+        for vp in (SPACE_SHARED, TIME_SHARED):
+            hosts = scenarios.uniform_hosts(1, 3, cores=1, mips=100.0)
+            vms = scenarios.uniform_vms(3, cores=1, mips=100.0)
+            cls = scenarios.make_cloudlets(
+                np.arange(3), np.full(3, 5000.0), np.zeros(3),
+                input_mb=0.0, output_mb=0.0)
+            scn = scenarios.Scenario(
+                hosts=hosts, vms=vms, cloudlets=cls,
+                market=scenarios.uniform_market(1),
+                policy=scenarios.make_policy(host_policy=hp, vm_policy=vp))
+            res = jax.jit(simulate)(scn)
+            f = np.array(res.finish_t)
+            np.testing.assert_allclose(f, 50.0, rtol=3e-3)
+            if ref is None:
+                ref = f
+            else:
+                np.testing.assert_allclose(f, ref, rtol=1e-5)
+
+
+def test_space_shared_fcfs_monotone():
+    """Under space/space on one single-core host, completion order follows
+    submission order (FCFS) for equal-length tasks."""
+    hosts = scenarios.uniform_hosts(1, 1, cores=1, mips=100.0, ram_mb=8192.0)
+    vms = scenarios.uniform_vms(1, cores=1, mips=100.0)
+    n = 6
+    cls = scenarios.make_cloudlets(
+        np.zeros(n, int), np.full(n, 1000.0), np.arange(n, dtype=float),
+        input_mb=0.0, output_mb=0.0)
+    scn = scenarios.Scenario(
+        hosts=hosts, vms=vms, cloudlets=cls,
+        market=scenarios.uniform_market(1),
+        policy=scenarios.make_policy())
+    res = jax.jit(simulate)(scn)
+    finish = np.array(res.finish_t)
+    assert (np.diff(finish) > 0).all()
+    np.testing.assert_allclose(finish, 10.0 * np.arange(1, n + 1), rtol=3e-3)

@@ -1,0 +1,59 @@
+"""Serving engine + CloudSim-driven scheduler."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import SPACE_SHARED, TIME_SHARED
+from repro.models import build_model
+from repro.serving import ServingEngine, choose_policy, queue_scenario
+from repro.serving.scheduler import Request
+
+
+def _engine(policy=SPACE_SHARED, slots=2, replan=0):
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, ServingEngine(model, params, n_slots=slots, max_len=64,
+                              policy=policy, replan_every=replan)
+
+
+@pytest.mark.parametrize("policy", [SPACE_SHARED, TIME_SHARED])
+def test_engine_drains(policy):
+    cfg, eng = _engine(policy)
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        eng.submit(rng.integers(0, cfg.vocab, size=8), max_new_tokens=5)
+    reqs = eng.run_until_drained(max_steps=200)
+    assert all(r.done for r in reqs)
+    assert all(r.generated >= 5 for r in reqs)
+
+
+def test_space_shared_is_fcfs_exclusive():
+    cfg, eng = _engine(SPACE_SHARED, slots=1)
+    rng = np.random.default_rng(0)
+    r1 = eng.submit(rng.integers(0, cfg.vocab, size=4), max_new_tokens=4)
+    r2 = eng.submit(rng.integers(0, cfg.vocab, size=4), max_new_tokens=4)
+    eng.run_until_drained(max_steps=100)
+    assert r1.finish_time < r2.finish_time  # strict FCFS on one slot
+
+
+def test_choose_policy_prefers_space_for_uniform_short():
+    """For equal-length jobs, space-shared has the lower mean TAT (the
+    classic M/D result the paper's Fig 9/10 illustrates)."""
+    reqs = [Request(rid=i, arrival=0.0, prompt_len=4, max_new_tokens=64)
+            for i in range(8)]
+    pol, metrics = choose_policy(reqs, n_slots=2, tokens_per_sec=100.0)
+    assert pol == SPACE_SHARED
+    assert metrics["space"]["mean_tat"] <= metrics["time"]["mean_tat"]
+    # makespan identical under work conservation
+    assert np.isclose(metrics["space"]["makespan"],
+                      metrics["time"]["makespan"], rtol=0.01)
+
+
+def test_queue_scenario_shapes():
+    reqs = [Request(rid=0, arrival=0.0, prompt_len=4, max_new_tokens=10)]
+    scn = queue_scenario(reqs, n_slots=4, tokens_per_sec=50.0,
+                         vm_policy=TIME_SHARED)
+    assert scn.cloudlets.n_cloudlets == 1
+    assert float(scn.hosts.mips[0, 0]) == 50.0

@@ -1,0 +1,95 @@
+"""End-to-end behaviour: the paper's experiments + the full train->serve loop
++ elastic restart, on CPU-sized configs."""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import SPACE_SHARED, TIME_SHARED, scenarios, simulate
+
+
+def test_fig9_staircase():
+    """Space-shared: group g finishes at exactly 1200*(g+1) s (20-min tasks,
+    dedicated cores) — paper Figure 9. Scaled to 100 hosts/5 VMs for CI."""
+    scn = scenarios.fig9_10_scenario(SPACE_SHARED, n_hosts=100, n_vms=5,
+                                     n_groups=4)
+    res = jax.jit(simulate)(scn)
+    sub = np.array(scn.cloudlets.submit_t)
+    fin = np.array(res.finish_t)
+    for g in range(4):
+        np.testing.assert_allclose(
+            fin[sub == g * 600], 1200.0 * (g + 1), rtol=3e-3)
+
+
+def test_fig10_time_shared_dynamics():
+    """Time-shared: first group finishes earlier than steady-state groups;
+    last group's turnaround improves as the system drains — Figure 10."""
+    scn = scenarios.fig9_10_scenario(TIME_SHARED, n_hosts=100, n_vms=5,
+                                     n_groups=6)
+    res = jax.jit(simulate)(scn)
+    sub = np.array(scn.cloudlets.submit_t)
+    fin = np.array(res.finish_t)
+    tat = fin - sub
+    g_tat = [tat[sub == g * 600].mean() for g in range(6)]
+    assert g_tat[0] < g_tat[2]          # early group beats steady state
+    assert g_tat[5] < g_tat[2]          # draining improves the tail
+    assert int(res.n_finished) == 6 * 5
+
+
+def test_train_then_serve_roundtrip(tmp_path):
+    """Train a small model, checkpoint, restore, serve it — full loop."""
+    from repro.ckpt import restore
+    from repro.launch.train import run_training
+    from repro.models import build_model
+    from repro.serving import ServingEngine
+
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    out = run_training(cfg, steps=12, global_batch=4, seq_len=32,
+                       ckpt_dir=str(tmp_path), ckpt_every=6, log_every=0)
+    assert out["steps_run"] == 12
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.train import adamw_init
+
+    (params, _), step = restore(str(tmp_path), (params, adamw_init(params)))
+    assert step == 12
+    eng = ServingEngine(model, params, n_slots=2, max_len=48)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        eng.submit(rng.integers(0, cfg.vocab, size=6), max_new_tokens=4)
+    reqs = eng.run_until_drained(max_steps=60)
+    assert all(r.done for r in reqs)
+
+
+def test_elastic_restart(tmp_path):
+    """Injected failures -> checkpoint restore -> completion (deliverable:
+    fault tolerance), with the CloudSim restart plan evaluated."""
+    from repro.launch.elastic import ElasticRunner
+
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    runner = ElasticRunner(cfg, str(tmp_path), steps=24, global_batch=4,
+                           seq_len=32, ckpt_every=6, n_workers=4)
+    out = runner.run(fail_at_steps=[10, 17])
+    assert out["restarts"] == 2
+    kinds = [e["kind"] for e in out["events"]]
+    assert kinds == ["failure", "failure", "finished"]
+    # resumed from the last checkpoint each time
+    assert out["events"][0]["resume_step"] == 6
+    assert out["events"][1]["resume_step"] == 12
+    assert out["events"][0]["plan"]["choice"] in ("survivors",
+                                                  "wait_for_repair")
+    assert np.isfinite(out["result"]["final_loss"])
+
+
+def test_restart_plan_tradeoff():
+    """The CloudSim plan flips as repair time varies (sanity of the
+    coordinator's decision model)."""
+    from repro.launch.elastic import plan_restart
+
+    fast_repair = plan_restart(steps_remaining=100, step_time_s=1.0,
+                               n_workers=8, n_survivors=2,
+                               repair_time_s=5.0)
+    slow_repair = plan_restart(steps_remaining=100, step_time_s=1.0,
+                               n_workers=8, n_survivors=2,
+                               repair_time_s=10_000.0)
+    assert fast_repair.choice == "wait_for_repair"
+    assert slow_repair.choice == "survivors"
