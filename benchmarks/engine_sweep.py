@@ -1,0 +1,105 @@
+"""Engine advance-sweep throughput: jnp reference vs Pallas kernel.
+
+Seeds the perf trajectory with a machine-readable baseline: runs the raw
+``advance_sweep`` kernel standalone (large C) and the full engine in both
+routings (``Scenario.sweep_impl``), then writes ``BENCH_engine.json``.
+
+    PYTHONPATH=src python -m benchmarks.engine_sweep
+
+On CPU the Pallas kernel executes in interpret mode, so its numbers are a
+correctness-seat baseline, not a speed claim — the Mosaic path lights up on
+TPU (kernels/ops.py routing).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scenarios, simulate
+from repro.kernels import ops
+
+OUT_PATH = "BENCH_engine.json"
+
+
+def _time(fn, *args, n_rep: int = 5) -> float:
+    out = fn(*args)                                # compile + warm
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n_rep):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n_rep
+
+
+def bench_kernel(c: int = 100_000, n_rep: int = 5) -> dict:
+    """Raw fused sweep: min-time-to-completion + depletion over C cloudlets."""
+    rng = np.random.default_rng(0)
+    rem = jnp.asarray(rng.uniform(1e3, 1e6, c).astype(np.float32))
+    rate = jnp.asarray(rng.uniform(0.0, 1e3, c).astype(np.float32))
+    active = rate > 1.0
+    bound = jnp.asarray(1e4, jnp.float32)
+
+    rows = {}
+    for impl in ("jnp", "pallas"):
+        advance = ops.resolve_advance(impl)
+        fn = jax.jit(advance)
+        wall = _time(fn, rem, rate, active, bound, n_rep=n_rep)
+        rows[impl] = {
+            "wall_s": wall,
+            "cloudlets": c,
+            "cloudlets_per_s": c / wall,
+        }
+    return rows
+
+
+def bench_engine(n_hosts: int = 2_000, n_vms: int = 50, n_groups: int = 5,
+                 n_rep: int = 3) -> dict:
+    """Full engine, fig9/10-style workload, jnp vs Pallas routing."""
+    rows = {}
+    for impl in ("jnp", "pallas"):
+        scn = scenarios.fig9_10_scenario(
+            scenarios.SPACE_SHARED, n_hosts=n_hosts, n_vms=n_vms,
+            n_groups=n_groups).replace(sweep_impl=impl)
+        fn = jax.jit(simulate)
+        wall = _time(fn, scn, n_rep=n_rep)
+        res = fn(scn)
+        n_events = int(res.n_events)
+        rows[impl] = {
+            "wall_s": wall,
+            "n_events": n_events,
+            "events_per_s": n_events / wall,
+            "n_finished": int(res.n_finished),
+        }
+    return rows
+
+
+def run() -> dict:
+    report = {
+        "backend": jax.default_backend(),
+        "pallas_interpret": jax.default_backend() != "tpu",
+        "advance_sweep_kernel": bench_kernel(),
+        "engine_fig9_10": bench_engine(),
+    }
+    jn, pl = report["engine_fig9_10"]["jnp"], report["engine_fig9_10"]["pallas"]
+    report["engine_speedup_pallas_vs_jnp"] = jn["wall_s"] / pl["wall_s"]
+    return report
+
+
+def main() -> None:
+    report = run()
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {OUT_PATH}")
+    for section in ("advance_sweep_kernel", "engine_fig9_10"):
+        for impl, row in report[section].items():
+            metrics = ",".join(f"{k}={v:.6g}" if isinstance(v, float) else
+                               f"{k}={v}" for k, v in row.items())
+            print(f"{section},{impl},{metrics}")
+
+
+if __name__ == "__main__":
+    main()

@@ -38,6 +38,11 @@ def main() -> None:
 
     campaign_throughput.main()
 
+    _section("Engine advance-sweep: jnp vs Pallas (-> BENCH_engine.json)")
+    from benchmarks import engine_sweep
+
+    engine_sweep.main()
+
     _section("Serving scheduler (beyond paper: CloudSim-driven batching)")
     from benchmarks import serving_sched
 

@@ -4,6 +4,11 @@ Discrete-event simulation of virtualized datacenters (Datacenter -> Host ->
 VM -> Cloudlet) with two-level space/time-shared scheduling, FCFS/best-fit VM
 provisioning, federation with sensor-driven migration, and market accounting
 — as one pure, jittable, vmappable JAX program (see DESIGN.md).
+
+The event-loop body lives exactly once (``step.event_step``); ``simulate``,
+``simulate_trace`` and ``simulate_history`` are thin drivers over it, and
+cross-cutting observables (energy, market accrual, federation sensing, trace
+sampling, …) are composable ``step.Instrument``s.
 """
 from repro.core.entities import (
     INF,
@@ -19,15 +24,32 @@ from repro.core.entities import (
     VMRequests,
     finished_mask,
 )
-from repro.core.engine import init_state, simulate, simulate_trace
+from repro.core.engine import (
+    History,
+    init_state,
+    simulate,
+    simulate_history,
+    simulate_instrumented,
+    simulate_trace,
+)
+from repro.core.step import (
+    Instrument,
+    StepEvent,
+    TraceInstrument,
+    UtilizationTimelineInstrument,
+    event_step,
+)
 from repro.core.campaign import run_campaign, run_campaign_sharded, stack_scenarios
-from repro.core import energy, policies, provision, scenarios, segments
+from repro.core import energy, policies, provision, scenarios, segments, step
 
 __all__ = [
     "INF", "SPACE_SHARED", "TIME_SHARED",
     "Cloudlets", "Hosts", "Market", "Policy", "Scenario",
     "SimResult", "SimState", "VMRequests", "finished_mask",
-    "init_state", "simulate", "simulate_trace",
+    "History", "Instrument", "StepEvent",
+    "TraceInstrument", "UtilizationTimelineInstrument",
+    "init_state", "event_step",
+    "simulate", "simulate_history", "simulate_instrumented", "simulate_trace",
     "run_campaign", "run_campaign_sharded", "stack_scenarios",
-    "energy", "policies", "provision", "scenarios", "segments",
+    "energy", "policies", "provision", "scenarios", "segments", "step",
 ]

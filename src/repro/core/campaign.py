@@ -6,7 +6,13 @@ function with traced policy/workload values and static shapes, a campaign is
 ``vmap(simulate)``; on a mesh it becomes ``shard_map`` over the data axis so a
 256-chip pod evaluates 256+ federated-cloud scenarios concurrently.  This is
 the paper's "repeatable, controllable, free-of-cost" experimentation scaled
-three orders of magnitude (DESIGN.md §2).
+three orders of magnitude (DESIGN.md §2, §5).
+
+Memory: a vmapped while_loop materializes every scenario's full working set
+at once, so 10k+-scenario sweeps can exceed device memory even though each
+simulation is tiny.  ``run_campaign(batched, chunk_size=...)`` slices the
+campaign axis into fixed-size chunks (one compilation, reused), donating each
+chunk's buffers to XLA so working memory is bounded by one chunk.
 """
 from __future__ import annotations
 
@@ -18,18 +24,85 @@ import jax.numpy as jnp
 from repro.core.engine import simulate
 from repro.core.entities import Scenario, SimResult
 
+try:  # jax >= 0.6 spells it jax.shard_map(check_vma=...)
+    _shard_map = jax.shard_map
+    _SMAP_COMPAT = {"check_vma": False}
+except AttributeError:  # jax 0.4.x: experimental, check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SMAP_COMPAT = {"check_rep": False}
+
 
 def stack_scenarios(scenarios: list[Scenario]) -> Scenario:
-    """Stack same-shape scenarios along a new leading campaign axis."""
+    """Stack same-shape scenarios along a new leading campaign axis.
+
+    Static fields (``max_steps``, ``sweep_impl``) are jit-cache metadata, not
+    arrays: they cannot vary across one campaign, so disagreement is an error
+    (it used to silently keep the first scenario's values).
+    """
     if not scenarios:
         raise ValueError("empty campaign")
+    ref = scenarios[0]
+    for i, scn in enumerate(scenarios[1:], start=1):
+        for field in ("max_steps", "sweep_impl"):
+            a, b = getattr(ref, field), getattr(scn, field)
+            if a != b:
+                raise ValueError(
+                    f"stack_scenarios: scenario {i} has {field}={b!r} but "
+                    f"scenario 0 has {a!r}; static fields must agree across "
+                    "a campaign (split into per-value campaigns or set them "
+                    "uniformly)"
+                )
+    ref_treedef = jax.tree.structure(ref)
+    for i, scn in enumerate(scenarios[1:], start=1):
+        td = jax.tree.structure(scn)
+        if td != ref_treedef:
+            raise ValueError(
+                f"stack_scenarios: scenario {i} has pytree structure {td} "
+                f"but scenario 0 has {ref_treedef}; power/topology/instrument "
+                "attachments must agree across a campaign"
+            )
     return jax.tree.map(lambda *xs: jnp.stack(xs), *scenarios)
 
 
-@jax.jit
-def run_campaign(batched: Scenario) -> SimResult:
-    """Run a stacked campaign on the local device."""
-    return jax.vmap(simulate)(batched)
+def _campaign_len(batched: Scenario) -> int:
+    return jax.tree.leaves(batched)[0].shape[0]
+
+
+_run_chunk = jax.jit(jax.vmap(simulate), donate_argnums=(0,))
+_run_whole = jax.jit(jax.vmap(simulate))
+
+
+def run_campaign(
+    batched: Scenario, chunk_size: int | None = None, donate: bool = False
+) -> SimResult:
+    """Run a stacked campaign on the local device.
+
+    ``chunk_size`` bounds working memory: the campaign axis is processed in
+    fixed-size chunks through one compiled program (the trailing chunk is
+    padded by repeating the last scenario, then trimmed), each chunk's input
+    buffers donated to XLA.  ``donate=True`` additionally donates the whole
+    stacked scenario on the unchunked path — only safe when the caller is
+    done with ``batched``.
+    """
+    if chunk_size is None:
+        return (_run_chunk if donate else _run_whole)(batched)
+    if chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    n = _campaign_len(batched)
+    results = []
+    for lo in range(0, n, chunk_size):
+        def _slice(x):
+            c = x[lo:lo + chunk_size]
+            short = chunk_size - c.shape[0]
+            if short:
+                pad = jnp.broadcast_to(x[-1:], (short,) + x.shape[1:])
+                c = jnp.concatenate([c, pad])
+            return c
+
+        # the chunk is a fresh temporary -> donating it is always safe
+        results.append(_run_chunk(jax.tree.map(_slice, batched)))
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs)[:n], *results)
 
 
 def run_campaign_sharded(batched: Scenario, mesh, axis: str = "data") -> SimResult:
@@ -44,14 +117,14 @@ def run_campaign_sharded(batched: Scenario, mesh, axis: str = "data") -> SimResu
     sharding = jax.sharding.NamedSharding(mesh, pspec)
 
     @partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(pspec,),
         out_specs=pspec,
         # while-loop carries mix varying (per-sim state) and unvarying
         # (scalars broadcast inside the loop) types; correctness is per-shard
         # independence, which vmap(simulate) guarantees
-        check_vma=False,
+        **_SMAP_COMPAT,
     )
     def _run(shard: Scenario) -> SimResult:
         return jax.vmap(simulate)(shard)

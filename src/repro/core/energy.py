@@ -65,25 +65,69 @@ class Topology:
         )
 
 
-def power_draw(scn: Scenario, state: SimState) -> Array:
-    """[D] instantaneous watts given the current allocation.
+def host_granted_mips(
+    scn: Scenario, state: SimState, vm_mips: Array | None = None
+) -> Array:
+    """[D, H] MIPS currently granted to VMs on each host.
 
-    Utilization per host = granted MIPS / capacity; idle power charged for
-    every existing host (no power-gating model — matches the paper's framing
-    of energy as an always-on datacenter cost).
+    ``vm_mips`` may be supplied by a caller that already ran the policy sweep
+    (the engine's EnergyInstrument passes ``StepEvent.vm_mips``) so the grant
+    is integrated over exactly the interval the sweep produced.
     """
-    vm_mips = policies.host_level_mips(scn, state)            # [V]
+    if vm_mips is None:
+        vm_mips = policies.host_level_mips(scn, state)        # [V]
     D, H = scn.hosts.cores.shape
     seg = jnp.where(
         state.vm_placed & scn.vms.exists,
         state.vm_dc * H + state.vm_host,
         D * H,
     )
-    granted = jnp.zeros((D * H + 1,), jnp.float32).at[
+    return jnp.zeros((D * H + 1,), jnp.float32).at[
         jnp.clip(seg, 0, D * H)
     ].add(vm_mips)[:-1].reshape(D, H)
+
+
+def host_utilization(
+    scn: Scenario, state: SimState, vm_mips: Array | None = None
+) -> Array:
+    """[D, H] granted / capacity, clipped to [0, 1]; 0 for capacity-less hosts."""
+    granted = host_granted_mips(scn, state, vm_mips)
     cap = scn.hosts.cores.astype(jnp.float32) * scn.hosts.mips
-    util = jnp.where(cap > 0, jnp.clip(granted / jnp.maximum(cap, 1e-9), 0, 1), 0.0)
+    return jnp.where(
+        cap > 0, jnp.clip(granted / jnp.maximum(cap, 1e-9), 0, 1), 0.0
+    )
+
+
+def dc_utilization(
+    scn: Scenario, state: SimState, vm_mips: Array | None = None
+) -> Array:
+    """[D] capacity-weighted datacenter utilization (the Sensor's CPU view)."""
+    granted = jnp.where(
+        scn.hosts.exists, host_granted_mips(scn, state, vm_mips), 0.0
+    )
+    cap = jnp.where(
+        scn.hosts.exists,
+        scn.hosts.cores.astype(jnp.float32) * scn.hosts.mips,
+        0.0,
+    )
+    total_cap = jnp.sum(cap, axis=1)
+    return jnp.where(
+        total_cap > 0,
+        jnp.clip(jnp.sum(granted, axis=1) / jnp.maximum(total_cap, 1e-9), 0, 1),
+        0.0,
+    )
+
+
+def power_draw(
+    scn: Scenario, state: SimState, vm_mips: Array | None = None
+) -> Array:
+    """[D] instantaneous watts given the current allocation.
+
+    Utilization per host = granted MIPS / capacity; idle power charged for
+    every existing host (no power-gating model — matches the paper's framing
+    of energy as an always-on datacenter cost).
+    """
+    util = host_utilization(scn, state, vm_mips)
     pm: PowerModel = scn.power            # type: ignore[attr-defined]
     watts = jnp.where(
         scn.hosts.exists,

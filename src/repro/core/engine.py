@@ -1,21 +1,27 @@
-"""The event-driven simulation engine (paper §4.1 re-derived as dataflow).
+"""Simulation drivers over the ``event_step`` kernel (paper §4.1).
 
 CloudSim advances the world between *events*: rates are piecewise-constant,
 so each ``updateVMsProcessing()`` sweep returns the next expected completion
-time and the clock jumps straight to the earliest one.  Here the sweep is one
-vectorized pass and the event loop is a ``jax.lax.while_loop``:
+time and the clock jumps straight to the earliest one.  The loop body lives
+exactly once, in ``core/step.py``; this module provides the three drivers:
 
-    next event = min( earliest cloudlet completion   (rem / rate),
-                      next cloudlet ready time        (submit + stage-in),
-                      next VM request,
-                      next migration completion,
-                      next Sensor tick,
-                      horizon )
+* ``simulate``          — ``lax.while_loop`` until horizon/completion; the
+                          production path, pure/jittable/vmappable.
+* ``simulate_trace``    — same loop with a ``TraceInstrument`` observer
+                          attached: per-cloudlet progress at sample times,
+                          reconstructed *exactly* by interpolation under the
+                          piecewise-constant rates — the event stream (and so
+                          every ``SimResult`` field, including cost/energy)
+                          is bit-identical to ``simulate``.
+* ``simulate_history``  — fixed-length ``lax.scan`` emitting the full
+                          per-event log (time, kind, per-DC utilization /
+                          cost / energy snapshots): the scenario-analysis
+                          surface for Figure 9/10-style timelines.
 
 Equivalence argument (DESIGN.md §2): for CloudSim's model class — linear
 work depletion under piecewise-constant allocations, with all state changes
-triggered by the event kinds above — jumping to the min of those bounds and
-re-running the two-level policy sweep produces the same trajectory as
+triggered by the event kinds in step.py — jumping to the min of those bounds
+and re-running the two-level policy sweep produces the same trajectory as
 SimJava's event queue, without materializing a queue at all.
 
 The whole loop is jittable, differentiable in the rates (not used), and
@@ -29,22 +35,25 @@ import jax
 import jax.numpy as jnp
 from jax import Array
 
-from repro.core import policies, provision
+from repro.core import step as step_mod
 from repro.core.entities import (
     INF,
     Scenario,
     SimResult,
     SimState,
 )
-
-
-def default_max_steps(scn: Scenario) -> int:
-    """Safety bound on event batches: starts + finishes + VM lifecycle + slack.
-
-    Federation scenarios add ~horizon/sensor_interval tick events; builders
-    for those pass ``Scenario.max_steps`` explicitly.
-    """
-    return 4 * (scn.cloudlets.n_cloudlets + scn.vms.n_vms) + 260
+from repro.core.pytree import pytree_dataclass
+from repro.core.step import (  # re-exported: the kernel surface
+    Instrument,
+    StepContext,
+    StepEvent,
+    TraceInstrument,
+    UtilizationTimelineInstrument,
+    default_max_steps,
+    event_step,
+    finalize_result,
+    make_context,
+)
 
 
 def init_state(scn: Scenario) -> SimState:
@@ -52,7 +61,6 @@ def init_state(scn: Scenario) -> SimState:
     D, H = hosts.cores.shape
     V, C = vms.n_vms, cls.n_cloudlets
     f32, i32 = jnp.float32, jnp.int32
-    zero_dh = jnp.zeros((D, H), f32)
     return SimState(
         t=jnp.asarray(0.0, f32),
         step=jnp.asarray(0, i32),
@@ -82,276 +90,109 @@ def init_state(scn: Scenario) -> SimState:
     )
 
 
-def _eps_mi(length_mi: Array) -> Array:
-    """Finish tolerance: float32 work counters drift ~ulp per event (DESIGN §2,
-    "f64-free"); tests bound the induced completion-time error."""
-    return 1e-5 * length_mi + 0.25
+def simulate_instrumented(
+    scn: Scenario, extra_instruments: tuple = ()
+) -> tuple[SimResult, dict]:
+    """Run one simulation and collect instrument outputs (by instrument name).
 
-
-def _advance_jnp(rem: Array, rate: Array, active: Array, bound_dt: Array):
-    """Reference advance sweep: min-time-to-completion + work depletion.
-
-    The Pallas twin lives in kernels/vm_update.py; ops.advance_sweep routes.
+    Instruments = step defaults + ``Scenario.instruments`` + ``extra_instruments``.
     """
-    dt_fin = jnp.where(active & (rate > 0), rem / jnp.maximum(rate, 1e-30), INF)
-    dt = jnp.minimum(jnp.min(dt_fin, initial=INF), bound_dt)
-    new_rem = jnp.where(active, jnp.maximum(rem - rate * dt, 0.0), rem)
-    return dt, new_rem
+    ctx, aux0 = make_context(scn, tuple(extra_instruments))
+    max_steps = step_mod.resolve_max_steps(scn, ctx.instruments)
 
+    def cond(carry) -> Array:
+        return step_mod.step_cond(scn, carry[0], max_steps)
 
-def _min_where(x: Array, mask: Array) -> Array:
-    return jnp.min(jnp.where(mask, x, INF), initial=INF)
+    def body(carry):
+        carry, _ = event_step(scn, carry, ctx)
+        return carry
 
-
-def _done_or_doomed(scn: Scenario, st: SimState) -> Array:
-    fin = policies.cloudlet_finished(st)
-    doomed = st.vm_failed[scn.cloudlets.vm]
-    return fin | doomed | ~scn.cloudlets.exists
+    st, aux = jax.lax.while_loop(cond, body, (init_state(scn), aux0))
+    return finalize_result(scn, st), step_mod.finalize_outputs(scn, st, ctx, aux)
 
 
 def simulate(scn: Scenario) -> SimResult:
     """Run one complete simulation; pure, jittable, vmappable."""
-    pol = scn.policy
-    cls, vms = scn.cloudlets, scn.vms
-    max_steps = scn.max_steps if scn.max_steps > 0 else default_max_steps(scn)
-
-    if scn.sweep_impl == "pallas":
-        from repro.kernels import ops as _kops
-
-        advance = _kops.advance_sweep
-    else:
-        advance = _advance_jnp
-
-    stage_in = jnp.where(
-        cls.input_mb > 0,
-        cls.input_mb / jnp.maximum(vms.bw_mbps[cls.vm], 1e-6),
-        0.0,
-    )
-    ready_t = cls.submit_t + stage_in
-
-    def cond(st: SimState) -> Array:
-        return (
-            (st.step < max_steps)
-            & (st.t < pol.horizon)
-            & ~jnp.all(_done_or_doomed(scn, st))
-        )
-
-    def body(st: SimState) -> SimState:
-        # --- Sensor tick (periodic stale-by-design load sensing, §2.3) ---
-        tick_due = pol.federation & (st.t >= st.last_tick + pol.sensor_interval)
-        st = st.replace(
-            sensed_load=jnp.where(
-                tick_due, provision.sense_load(scn, st), st.sensed_load
-            ),
-            last_tick=jnp.where(tick_due, st.t, st.last_tick),
-        )
-
-        # --- VM lifecycle: destroy-drained, then place due requests ---
-        st = provision.release_done_vms(scn, st)
-        st, _ = provision.provision_due_vms(scn, st)
-
-        # --- the updateVMsProcessing sweep: rates for every task unit ---
-        rate, vm_mips = policies.cloudlet_rates(scn, st)
-        active = rate > 0
-
-        # --- next event bound from non-completion sources ---
-        unready = cls.exists & (ready_t > st.t)
-        unplaced = vms.exists & ~st.vm_placed & ~st.vm_failed
-        migrating = vms.exists & st.vm_placed & (st.vm_avail_t > st.t)
-        next_tick = jnp.where(
-            pol.federation, st.last_tick + pol.sensor_interval, INF
-        )
-        bound_t = jnp.minimum(
-            jnp.minimum(_min_where(ready_t, unready),
-                        _min_where(vms.request_t, unplaced)),
-            jnp.minimum(_min_where(st.vm_avail_t, migrating),
-                        jnp.minimum(next_tick, pol.horizon)),
-        )
-        bound_dt = jnp.maximum(bound_t - st.t, 0.0)
-
-        # --- fused advance: completion min-reduce + work depletion ---
-        dt, new_rem = advance(st.rem_mi, rate, active, bound_dt)
-        t_next = st.t + dt
-
-        newly_started = active & ~st.started
-        newly_fin = active & (new_rem <= _eps_mi(cls.length_mi))
-        new_rem = jnp.where(newly_fin, 0.0, new_rem)
-
-        # --- market accrual over [t, t_next] (paper §3.3) ---
-        dc_of_cl = st.vm_dc[cls.vm]
-        run_cost = jnp.where(
-            active, dt * scn.market.cost_per_cpu_sec[dc_of_cl], 0.0
-        )
-        io_mb = jnp.where(newly_started, cls.input_mb, 0.0) + jnp.where(
-            newly_fin, cls.output_mb, 0.0
-        )
-        io_cost = io_mb * scn.market.cost_per_bw_mb[dc_of_cl]
-        D = scn.hosts.n_dc
-        dc_seg = jnp.clip(dc_of_cl, 0, D - 1)
-        energy = st.energy_j
-        if scn.power is not None:
-            from repro.core import energy as energy_mod
-
-            energy = energy + energy_mod.power_draw(scn, st) * dt
-        st = st.replace(
-            t=t_next,
-            step=st.step + 1,
-            rem_mi=new_rem,
-            started=st.started | newly_started,
-            start_t=jnp.where(newly_started, st.t, st.start_t),
-            finish_t=jnp.where(newly_fin, t_next, st.finish_t),
-            cpu_time=st.cpu_time + jnp.where(active, dt, 0.0),
-            cpu_cost=st.cpu_cost.at[dc_seg].add(run_cost),
-            bw_cost=st.bw_cost.at[dc_seg].add(io_cost),
-            energy_j=energy,
-        )
-        return st
-
-    st = jax.lax.while_loop(cond, body, init_state(scn))
-
-    fin = policies.cloudlet_finished(st) & cls.exists
-    tat = jnp.where(fin, st.finish_t - cls.submit_t, INF)
-    n_fin = jnp.sum(fin.astype(jnp.int32))
-    mean_tat = jnp.sum(jnp.where(fin, tat, 0.0)) / jnp.maximum(n_fin, 1)
-    makespan = jnp.max(jnp.where(fin, st.finish_t, -INF), initial=-INF)
-    total_cost = jnp.sum(st.cpu_cost + st.ram_cost + st.storage_cost + st.bw_cost)
-    return SimResult(
-        finish_t=st.finish_t,
-        start_t=st.start_t,
-        turnaround=tat,
-        makespan=makespan,
-        mean_turnaround=mean_tat,
-        n_finished=n_fin,
-        n_events=st.step,
-        n_migrations=jnp.sum(st.vm_migrations),
-        vm_placed=st.vm_placed,
-        vm_dc=st.vm_dc,
-        vm_failed=st.vm_failed,
-        cpu_cost=st.cpu_cost,
-        ram_cost=st.ram_cost,
-        storage_cost=st.storage_cost,
-        bw_cost=st.bw_cost,
-        energy_j=st.energy_j,
-        total_cost=total_cost,
-        end_t=st.t,
-    )
+    res, _ = simulate_instrumented(scn)
+    return res
 
 
 def simulate_trace(scn: Scenario, sample_ts: Array) -> tuple[SimResult, Array]:
     """Simulation + progress trace: fraction of work done per cloudlet at each
-    ``sample_ts`` point.  Reconstructed exactly from start/finish times under
-    the *observed* rate profile by re-running the clock forward between
-    samples — used by the Figure 9/10 reproduction.
+    ``sample_ts`` point — used by the Figure 9/10 reproduction.
 
-    Implementation: run the ordinary simulation to get exact event times is
-    not enough to recover mid-flight progress, so this variant re-executes the
-    loop with a bounded scan that additionally stops at every sample point.
+    The trace is a pure observer (``TraceInstrument``): rates are
+    piecewise-constant, so mid-interval progress interpolates exactly and no
+    extra clock stop is needed.  The returned ``SimResult`` is therefore
+    bit-identical to ``simulate(scn)`` — cost and energy included.  Rows of
+    the progress matrix follow ``sample_ts`` in ascending order.
     """
-    ts = jnp.sort(sample_ts)
-    bumped = scn.replace(
-        cloudlets=scn.cloudlets,  # unchanged; samples only add clock stops
-        max_steps=(scn.max_steps if scn.max_steps > 0 else default_max_steps(scn))
-        + ts.shape[0]
-        + 8,
+    ts = jnp.sort(jnp.asarray(sample_ts, jnp.float32))
+    tracer = TraceInstrument(sample_ts=ts)
+    res, out = simulate_instrumented(scn, (tracer,))
+    return res, out["trace"]["progress"]
+
+
+@pytree_dataclass
+class History:
+    """Fixed-length per-event log, leading axis = ``max_steps``.
+
+    Rows past the simulation's end are zero-filled with ``valid=False`` and
+    ``kind=-1`` (the fixed shape is what lets a campaign vmap histories).
+    """
+
+    t: Array            # [T] f32  clock after each event
+    dt: Array           # [T] f32  interval length
+    kind: Array         # [T] i32  step.K_* classification (-1: padding)
+    valid: Array        # [T] bool event actually happened
+    n_finished: Array   # [T] i32  cloudlets finished so far
+    utilization: Array  # [T, D] f32 per-DC utilization during the interval
+    cpu_cost: Array     # [T, D] f32 accrued CPU cost after the event
+    bw_cost: Array      # [T, D] f32 accrued bandwidth cost after the event
+    energy_j: Array     # [T, D] f32 accrued energy after the event
+
+
+def simulate_history(scn: Scenario) -> tuple[SimResult, History]:
+    """Run one simulation emitting the full per-event log.
+
+    A fixed-length ``lax.scan`` over ``event_step``: iterations past the end
+    carry the final state unchanged and emit invalid rows, so the result is
+    bit-identical to ``simulate`` while exposing the whole trajectory — the
+    scenario-analysis surface (per-DC utilization/cost/energy timelines) the
+    while-loop drivers cannot produce.
+    """
+    from repro.core import energy as energy_mod
+    from repro.core import policies
+
+    ctx, aux0 = make_context(scn)
+    max_steps = step_mod.resolve_max_steps(scn, ctx.instruments)
+    i32 = jnp.int32
+
+    def body(carry, _):
+        st, aux = carry
+        live = step_mod.step_cond(scn, st, max_steps)
+        (st2, aux2), ev = event_step(scn, (st, aux), ctx)
+        util = energy_mod.dc_utilization(scn, st2, vm_mips=ev.vm_mips)
+        n_fin = jnp.sum(
+            (policies.cloudlet_finished(st2) & scn.cloudlets.exists).astype(i32)
+        )
+        rec = History(
+            t=jnp.where(live, ev.t1, 0.0),
+            dt=jnp.where(live, ev.dt, 0.0),
+            kind=jnp.where(live, ev.kind, -1),
+            valid=live,
+            n_finished=jnp.where(live, n_fin, 0),
+            utilization=jnp.where(live, util, 0.0),
+            cpu_cost=jnp.where(live, st2.cpu_cost, 0.0),
+            bw_cost=jnp.where(live, st2.bw_cost, 0.0),
+            energy_j=jnp.where(live, st2.energy_j, 0.0),
+        )
+        carry = jax.tree.map(
+            lambda a, b: jnp.where(live, a, b), (st2, aux2), (st, aux)
+        )
+        return carry, rec
+
+    (st, _), hist = jax.lax.scan(
+        body, (init_state(scn), aux0), None, length=max_steps
     )
-    pol = bumped.policy
-    cls, vms = bumped.cloudlets, bumped.vms
-
-    if bumped.sweep_impl == "pallas":
-        from repro.kernels import ops as _kops
-
-        advance = _kops.advance_sweep
-    else:
-        advance = _advance_jnp
-
-    stage_in = jnp.where(
-        cls.input_mb > 0,
-        cls.input_mb / jnp.maximum(vms.bw_mbps[cls.vm], 1e-6),
-        0.0,
-    )
-    ready_t = cls.submit_t + stage_in
-    n_samples = ts.shape[0]
-    progress0 = jnp.zeros((n_samples, cls.n_cloudlets), jnp.float32)
-
-    def cond(carry):
-        st, _, cursor = carry
-        return (
-            (st.step < bumped.max_steps)
-            & ((st.t < pol.horizon) | (cursor < n_samples))
-            & (~jnp.all(_done_or_doomed(bumped, st)) | (cursor < n_samples))
-        )
-
-    def body(carry):
-        st, prog, cursor = carry
-        tick_due = pol.federation & (st.t >= st.last_tick + pol.sensor_interval)
-        st = st.replace(
-            sensed_load=jnp.where(
-                tick_due, provision.sense_load(bumped, st), st.sensed_load
-            ),
-            last_tick=jnp.where(tick_due, st.t, st.last_tick),
-        )
-        st = provision.release_done_vms(bumped, st)
-        st, _ = provision.provision_due_vms(bumped, st)
-        rate, _ = policies.cloudlet_rates(bumped, st)
-        active = rate > 0
-
-        unready = cls.exists & (ready_t > st.t)
-        unplaced = vms.exists & ~st.vm_placed & ~st.vm_failed
-        migrating = vms.exists & st.vm_placed & (st.vm_avail_t > st.t)
-        next_tick = jnp.where(pol.federation, st.last_tick + pol.sensor_interval, INF)
-        next_sample = jnp.where(cursor < n_samples, ts[jnp.minimum(cursor, n_samples - 1)], INF)
-        bound_t = jnp.minimum(
-            jnp.minimum(_min_where(ready_t, unready), _min_where(vms.request_t, unplaced)),
-            jnp.minimum(
-                jnp.minimum(_min_where(st.vm_avail_t, migrating), next_sample),
-                jnp.minimum(next_tick, pol.horizon),
-            ),
-        )
-        bound_dt = jnp.maximum(bound_t - st.t, 0.0)
-        dt, new_rem = advance(st.rem_mi, rate, active, bound_dt)
-        t_next = st.t + dt
-
-        newly_started = active & ~st.started
-        newly_fin = active & (new_rem <= _eps_mi(cls.length_mi))
-        new_rem = jnp.where(newly_fin, 0.0, new_rem)
-
-        at_sample = (cursor < n_samples) & (
-            t_next >= ts[jnp.minimum(cursor, n_samples - 1)]
-        )
-        frac = 1.0 - new_rem / jnp.maximum(cls.length_mi, 1e-9)
-        prog = jnp.where(
-            at_sample,
-            prog.at[jnp.minimum(cursor, n_samples - 1)].set(frac),
-            prog,
-        )
-        cursor = cursor + at_sample.astype(jnp.int32)
-
-        st = st.replace(
-            t=t_next,
-            step=st.step + 1,
-            rem_mi=new_rem,
-            started=st.started | newly_started,
-            start_t=jnp.where(newly_started, st.t, st.start_t),
-            finish_t=jnp.where(newly_fin, t_next, st.finish_t),
-            cpu_time=st.cpu_time + jnp.where(active, dt, 0.0),
-        )
-        return st, prog, cursor
-
-    st, prog, _ = jax.lax.while_loop(cond, body, (init_state(bumped), progress0, jnp.asarray(0, jnp.int32)))
-
-    fin = policies.cloudlet_finished(st) & cls.exists
-    tat = jnp.where(fin, st.finish_t - cls.submit_t, INF)
-    n_fin = jnp.sum(fin.astype(jnp.int32))
-    mean_tat = jnp.sum(jnp.where(fin, tat, 0.0)) / jnp.maximum(n_fin, 1)
-    makespan = jnp.max(jnp.where(fin, st.finish_t, -INF), initial=-INF)
-    total_cost = jnp.sum(st.cpu_cost + st.ram_cost + st.storage_cost + st.bw_cost)
-    res = SimResult(
-        finish_t=st.finish_t, start_t=st.start_t, turnaround=tat,
-        makespan=makespan, mean_turnaround=mean_tat, n_finished=n_fin,
-        n_events=st.step, n_migrations=jnp.sum(st.vm_migrations),
-        vm_placed=st.vm_placed, vm_dc=st.vm_dc, vm_failed=st.vm_failed,
-        cpu_cost=st.cpu_cost, ram_cost=st.ram_cost,
-        storage_cost=st.storage_cost, bw_cost=st.bw_cost,
-        energy_j=st.energy_j, total_cost=total_cost, end_t=st.t,
-    )
-    return res, prog
+    return finalize_result(scn, st), hist

@@ -129,6 +129,10 @@ class Scenario:
     ``power`` and ``topology`` (core/energy.py) are optional: the paper's
     stated future work — energy accounting and BRITE-style inter-DC links —
     activate when provided and change nothing when None.
+
+    ``instruments`` holds *extra* step.Instrument observables, threaded
+    through the event loop after the defaults (sensor, market, energy); their
+    array fields are traced data, so campaigns may vmap over them.
     """
 
     hosts: Hosts
@@ -138,7 +142,8 @@ class Scenario:
     policy: Policy
     power: object = None        # energy.PowerModel | None
     topology: object = None     # energy.Topology | None
-    max_steps: int = 0          # 0 -> derived bound (see engine.default_max_steps)
+    instruments: tuple = ()     # tuple[step.Instrument, ...] extra observables
+    max_steps: int = 0          # 0 -> derived bound (see step.default_max_steps)
     sweep_impl: str = "jnp"     # "jnp" | "pallas" — advance-sweep implementation
 
 

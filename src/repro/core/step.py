@@ -1,0 +1,506 @@
+"""The event-step kernel: the simulator's event-loop body, exactly once.
+
+``simulate``, ``simulate_trace`` and ``simulate_history`` (engine.py) are thin
+drivers over one function — ``event_step`` — which advances the world by one
+event batch:
+
+    1. instrument ``pre`` hooks      (Sensor tick lives here)
+    2. VM lifecycle                  (release drained, place due requests)
+    3. policy sweep                  (per-cloudlet MIPS rates)
+    4. next-event bound              (ready / request / migration / instrument
+                                      bounds / horizon)
+    5. fused advance                 (min-time-to-completion + work depletion,
+                                      jnp or Pallas — resolved once per driver)
+    6. instrument ``post`` hooks     (market accrual, energy integration,
+                                      trace sampling, custom observables)
+
+Cross-cutting observables are **Instruments**: small pytrees with
+``init / pre / bound / post / finalize`` hooks threaded through the loop as an
+auxiliary carry.  The engine body knows nothing about federation sensing,
+prices, power models or progress traces — each is one class below, and a new
+observable (say, a per-DC utilization timeline for Figure 9/10-style plots)
+is one more class, not an engine fork.  See DESIGN.md §2 for the equivalence
+argument and §3 for the instrument contract.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core import policies, provision
+from repro.kernels import ops as _kernel_ops
+from repro.core.entities import (
+    INF,
+    Scenario,
+    SimResult,
+    SimState,
+)
+from repro.core.pytree import pytree_dataclass
+
+# Event kinds recorded by ``StepEvent.kind`` / ``History.kind``.
+K_COMPLETION = 0   # a cloudlet ran out of work
+K_READY = 1        # a submitted cloudlet finished stage-in
+K_VM_REQUEST = 2   # a broker VM request came due
+K_MIGRATION = 3    # a VM creation/migration transfer completed
+K_TICK = 4         # a federation Sensor refresh
+K_INSTRUMENT = 5   # a custom instrument clock stop
+K_HORIZON = 6      # the simulation horizon
+
+
+def default_max_steps(scn: Scenario) -> int:
+    """Safety bound on event batches: starts + finishes + VM lifecycle + slack.
+
+    Federation scenarios add ~horizon/sensor_interval tick events; builders
+    for those pass ``Scenario.max_steps`` explicitly.
+    """
+    return 4 * (scn.cloudlets.n_cloudlets + scn.vms.n_vms) + 260
+
+
+def resolve_max_steps(scn: Scenario, instruments: tuple = ()) -> int:
+    """Driver step budget: scenario override or derived bound, plus whatever
+    the attached instruments declare via ``Instrument.extra_steps``."""
+    base = scn.max_steps if scn.max_steps > 0 else default_max_steps(scn)
+    return base + sum(ins.extra_steps(scn) for ins in instruments)
+
+
+def resolve_advance(scn: Scenario) -> Callable:
+    """Choose the advance-sweep implementation once per driver (DESIGN.md §4).
+
+    The kernels import happens at module scope, NOT here: importing a module
+    mid-trace would create its module-level jnp constants under the active
+    jit trace and leak tracers into later compilations.
+    """
+    return _kernel_ops.resolve_advance(scn.sweep_impl)
+
+
+def _eps_mi(length_mi: Array) -> Array:
+    """Finish tolerance: float32 work counters drift ~ulp per event (DESIGN.md
+    §2, "f64-free"); tests bound the induced completion-time error."""
+    return 1e-5 * length_mi + 0.25
+
+
+def _min_where(x: Array, mask: Array) -> Array:
+    return jnp.min(jnp.where(mask, x, INF), initial=INF)
+
+
+def _done_or_doomed(scn: Scenario, st: SimState) -> Array:
+    fin = policies.cloudlet_finished(st)
+    doomed = st.vm_failed[scn.cloudlets.vm]
+    return fin | doomed | ~scn.cloudlets.exists
+
+
+def step_cond(scn: Scenario, st: SimState, max_steps: int) -> Array:
+    """The loop-continuation predicate shared by every driver."""
+    return (
+        (st.step < max_steps)
+        & (st.t < scn.policy.horizon)
+        & ~jnp.all(_done_or_doomed(scn, st))
+    )
+
+
+def ready_times(scn: Scenario) -> Array:
+    """[C] submit + SAN stage-in: when each cloudlet may start executing."""
+    cls, vms = scn.cloudlets, scn.vms
+    stage_in = jnp.where(
+        cls.input_mb > 0,
+        cls.input_mb / jnp.maximum(vms.bw_mbps[cls.vm], 1e-6),
+        0.0,
+    )
+    return cls.submit_t + stage_in
+
+
+@pytree_dataclass
+class StepEvent:
+    """What one ``event_step`` emitted — everything instruments may observe.
+
+    Rates are piecewise-constant over ``[t0, t1)`` (DESIGN.md §2), so any
+    linear observable integrates exactly from these fields alone.
+    """
+
+    t0: Array              # scalar f32: interval start (clock before the step)
+    t1: Array              # scalar f32: interval end (clock after the step)
+    dt: Array              # scalar f32: t1 - t0
+    kind: Array            # scalar i32: K_* event classification
+    rate: Array            # [C] f32  per-cloudlet MIPS during the interval
+    active: Array          # [C] bool executing during the interval
+    rem_before: Array      # [C] f32  remaining MI at t0
+    newly_started: Array   # [C] bool first granted capacity this step
+    newly_finished: Array  # [C] bool depleted their work this step
+    vm_mips: Array         # [V] f32  host-level granted MIPS during the interval
+
+
+class Instrument:
+    """Base observable: override any subset of the five hooks.
+
+    ``aux`` is an arbitrary pytree threaded through the loop (the instrument's
+    private state); hooks must be pure and shape-stable.  ``pre`` may rewrite
+    ``SimState`` before the policy sweep, ``bound`` contributes an absolute
+    next-event time (a clock stop), ``post`` observes the emitted ``StepEvent``
+    after the state update, ``finalize`` turns the final aux into outputs.
+    """
+
+    name: str = "instrument"
+    bound_kind: int = K_INSTRUMENT
+
+    def init(self, scn: Scenario):
+        return ()
+
+    def extra_steps(self, scn: Scenario) -> int:
+        """Static add-on to the driver's ``max_steps`` safety bound.
+
+        An instrument whose ``bound()`` adds clock stops creates events the
+        default bound (starts/finishes/lifecycle) does not count; override
+        this with a concrete int so the loop cannot silently truncate.
+        (Traced quantities — e.g. horizon/period with a traced horizon —
+        cannot be counted here; set ``Scenario.max_steps`` explicitly then,
+        as the federation builders do for Sensor ticks.)
+        """
+        return 0
+
+    def pre(self, scn: Scenario, st: SimState, aux):
+        return st, aux
+
+    def bound(self, scn: Scenario, st: SimState, aux) -> Array:
+        return INF
+
+    def post(self, scn: Scenario, st: SimState, ev: StepEvent, aux):
+        return st, aux
+
+    def finalize(self, scn: Scenario, st: SimState, aux) -> dict:
+        return {}
+
+
+@pytree_dataclass
+class SensorInstrument(Instrument):
+    """Periodic stale-by-design load sensing (paper §2.3, the CIS Sensor).
+
+    ``pre``: refresh ``sensed_load`` when a tick is due.  ``bound``: the next
+    tick is a clock stop so the loop never jumps across a refresh.
+    """
+
+    # class attrs, unannotated on purpose: not dataclass/pytree fields
+    name = "sensor"
+    bound_kind = K_TICK
+
+    def pre(self, scn: Scenario, st: SimState, aux):
+        pol = scn.policy
+        tick_due = pol.federation & (st.t >= st.last_tick + pol.sensor_interval)
+        st = st.replace(
+            sensed_load=jnp.where(
+                tick_due, provision.sense_load(scn, st), st.sensed_load
+            ),
+            last_tick=jnp.where(tick_due, st.t, st.last_tick),
+        )
+        return st, aux
+
+    def bound(self, scn: Scenario, st: SimState, aux) -> Array:
+        pol = scn.policy
+        return jnp.where(pol.federation, st.last_tick + pol.sensor_interval, INF)
+
+
+@pytree_dataclass
+class MarketInstrument(Instrument):
+    """Per-interval market accrual (paper §3.3): CPU-seconds while executing,
+    bandwidth at cloudlet IO edges.  (RAM/storage are billed at VM creation
+    inside the provisioner — a placement decision, not an interval integral.)
+    """
+
+    name = "market"
+
+    def post(self, scn: Scenario, st: SimState, ev: StepEvent, aux):
+        cls = scn.cloudlets
+        dc_of_cl = st.vm_dc[cls.vm]
+        run_cost = jnp.where(
+            ev.active, ev.dt * scn.market.cost_per_cpu_sec[dc_of_cl], 0.0
+        )
+        io_mb = jnp.where(ev.newly_started, cls.input_mb, 0.0) + jnp.where(
+            ev.newly_finished, cls.output_mb, 0.0
+        )
+        io_cost = io_mb * scn.market.cost_per_bw_mb[dc_of_cl]
+        dc_seg = jnp.clip(dc_of_cl, 0, scn.hosts.n_dc - 1)
+        st = st.replace(
+            cpu_cost=st.cpu_cost.at[dc_seg].add(run_cost),
+            bw_cost=st.bw_cost.at[dc_seg].add(io_cost),
+        )
+        return st, aux
+
+
+@pytree_dataclass
+class EnergyInstrument(Instrument):
+    """Integrate P(t)·dt per DC under the linear power model (energy.py).
+
+    No-op when ``Scenario.power`` is None — energy stays exactly zero.
+    """
+
+    name = "energy"
+
+    def post(self, scn: Scenario, st: SimState, ev: StepEvent, aux):
+        if scn.power is None:
+            return st, aux
+        from repro.core import energy as energy_mod
+
+        watts = energy_mod.power_draw(scn, st, vm_mips=ev.vm_mips)
+        return st.replace(energy_j=st.energy_j + watts * ev.dt), aux
+
+
+@pytree_dataclass
+class TraceInstrument(Instrument):
+    """Per-cloudlet progress fractions at ``sample_ts`` — a pure observer.
+
+    Rates are piecewise-constant, so mid-interval progress interpolates
+    *exactly*: rem(s) = rem(t0) − rate·(s − t0) for s in [t0, t1].  No clock
+    stop is added, hence a traced run's event stream — and every ``SimResult``
+    field, including cost and energy — is bit-identical to the untraced run
+    (DESIGN.md §2; tests/test_trace_equivalence.py).  Rows of the output align
+    with ``sample_ts`` as given.
+    """
+
+    name = "trace"
+
+    sample_ts: Array   # [S] f32 absolute sample times
+
+    def init(self, scn: Scenario):
+        S = self.sample_ts.shape[0]
+        C = scn.cloudlets.n_cloudlets
+        return (
+            jnp.zeros((S, C), jnp.float32),   # progress fractions
+            jnp.zeros((S,), bool),            # recorded mask
+        )
+
+    def post(self, scn: Scenario, st: SimState, ev: StepEvent, aux):
+        prog, recorded = aux
+        ts = self.sample_ts
+        length = scn.cloudlets.length_mi
+        dt_s = jnp.clip(ts - ev.t0, 0.0, ev.dt)                       # [S]
+        depleted = ev.rate[None, :] * dt_s[:, None]                    # [S, C]
+        rem_s = jnp.where(
+            ev.active[None, :],
+            jnp.maximum(ev.rem_before[None, :] - depleted, 0.0),
+            ev.rem_before[None, :],
+        )
+        frac = 1.0 - rem_s / jnp.maximum(length, 1e-9)[None, :]
+        hit = ~recorded & (ts <= ev.t1)
+        prog = jnp.where(hit[:, None], frac, prog)
+        return st, (prog, recorded | hit)
+
+    def finalize(self, scn: Scenario, st: SimState, aux) -> dict:
+        prog, recorded = aux
+        # Samples past the last event see the frozen final state exactly.
+        final = 1.0 - st.rem_mi / jnp.maximum(scn.cloudlets.length_mi, 1e-9)
+        return {"progress": jnp.where(recorded[:, None], prog, final[None, :])}
+
+
+@pytree_dataclass
+class UtilizationTimelineInstrument(Instrument):
+    """Per-DC utilization sampled at ``sample_ts`` — the Figure 9/10-style
+    observable the pre-instrument engine could not produce without a fork.
+    """
+
+    name = "utilization"
+
+    sample_ts: Array   # [S] f32
+
+    def init(self, scn: Scenario):
+        S = self.sample_ts.shape[0]
+        return (
+            jnp.zeros((S, scn.hosts.n_dc), jnp.float32),
+            jnp.zeros((S,), bool),
+        )
+
+    def post(self, scn: Scenario, st: SimState, ev: StepEvent, aux):
+        util_tl, recorded = aux
+        from repro.core import energy as energy_mod
+
+        util = energy_mod.dc_utilization(scn, st, vm_mips=ev.vm_mips)  # [D]
+        hit = ~recorded & (self.sample_ts <= ev.t1)
+        util_tl = jnp.where(hit[:, None], util[None, :], util_tl)
+        return st, (util_tl, recorded | hit)
+
+    def finalize(self, scn: Scenario, st: SimState, aux) -> dict:
+        util_tl, recorded = aux
+        from repro.core import energy as energy_mod
+
+        final = energy_mod.dc_utilization(scn, st)
+        return {
+            "utilization": jnp.where(recorded[:, None], util_tl, final[None, :])
+        }
+
+
+def default_instruments() -> tuple[Instrument, ...]:
+    """The always-on observables — the semantics ``simulate`` ships with."""
+    return (SensorInstrument(), MarketInstrument(), EnergyInstrument())
+
+
+@pytree_dataclass(static=("advance",))
+class StepContext:
+    """Loop-invariant context resolved once per driver.
+
+    ``advance`` is static (it keys the jit cache: jnp vs Pallas); ``ready_t``
+    and the instrument tuple are traced data, so campaigns may vmap over them.
+    """
+
+    ready_t: Array                 # [C] precomputed stage-in completion times
+    instruments: tuple             # tuple[Instrument, ...]
+    advance: Callable = None
+
+
+def make_context(
+    scn: Scenario, extra_instruments: tuple = ()
+) -> tuple[StepContext, tuple]:
+    """Build the step context + initial instrument aux states for a driver.
+
+    Instrument order — defaults, then ``Scenario.instruments``, then driver
+    extras — is the accrual order inside each step.
+    """
+    instruments = default_instruments() + tuple(scn.instruments) + tuple(
+        extra_instruments
+    )
+    names = [ins.name for ins in instruments]
+    dupes = {n for n in names if names.count(n) > 1}
+    if dupes:
+        raise ValueError(
+            f"duplicate instrument name(s) {sorted(dupes)}: outputs are keyed "
+            "by name — give each instance a distinct `name` class attr"
+        )
+    ctx = StepContext(
+        ready_t=ready_times(scn),
+        instruments=instruments,
+        advance=resolve_advance(scn),
+    )
+    aux = tuple(ins.init(scn) for ins in instruments)
+    return ctx, aux
+
+
+def event_step(
+    scn: Scenario, carry: tuple[SimState, tuple], ctx: StepContext
+) -> tuple[tuple[SimState, tuple], StepEvent]:
+    """Advance the world by one event batch.  THE event-loop body.
+
+    ``carry`` is ``(SimState, instrument aux tuple)``; returns the stepped
+    carry plus the emitted ``StepEvent``.  Pure, jittable, vmappable; every
+    driver — while_loop or scan — wraps exactly this function.
+    """
+    st, aux = carry
+    pol, cls, vms = scn.policy, scn.cloudlets, scn.vms
+    instruments = ctx.instruments
+
+    # --- instrument pre hooks (Sensor tick refreshes sensed_load) ---
+    aux = list(aux)
+    for i, ins in enumerate(instruments):
+        st, aux[i] = ins.pre(scn, st, aux[i])
+
+    # --- VM lifecycle: destroy-drained, then place due requests ---
+    st = provision.release_done_vms(scn, st)
+    st, _ = provision.provision_due_vms(scn, st)
+
+    # --- the updateVMsProcessing sweep: rates for every task unit ---
+    rate, vm_mips = policies.cloudlet_rates(scn, st)
+    active = rate > 0
+
+    # --- next event bound from non-completion sources ---
+    unready = cls.exists & (ctx.ready_t > st.t)
+    unplaced = vms.exists & ~st.vm_placed & ~st.vm_failed
+    migrating = vms.exists & st.vm_placed & (st.vm_avail_t > st.t)
+    cand_t = [
+        _min_where(ctx.ready_t, unready),
+        _min_where(vms.request_t, unplaced),
+        _min_where(st.vm_avail_t, migrating),
+    ]
+    cand_k = [K_READY, K_VM_REQUEST, K_MIGRATION]
+    for i, ins in enumerate(instruments):
+        cand_t.append(ins.bound(scn, st, aux[i]))
+        cand_k.append(ins.bound_kind)
+    cand_t.append(pol.horizon)
+    cand_k.append(K_HORIZON)
+    cand_ts = jnp.stack(cand_t)
+    bound_t = jnp.min(cand_ts)
+    bound_dt = jnp.maximum(bound_t - st.t, 0.0)
+
+    # --- fused advance: completion min-reduce + work depletion ---
+    dt, new_rem = ctx.advance(st.rem_mi, rate, active, bound_dt)
+    t_next = st.t + dt
+
+    newly_started = active & ~st.started
+    newly_fin = active & (new_rem <= _eps_mi(cls.length_mi))
+    new_rem = jnp.where(newly_fin, 0.0, new_rem)
+
+    kind = jnp.where(
+        jnp.any(newly_fin),
+        K_COMPLETION,
+        jnp.asarray(cand_k, jnp.int32)[jnp.argmin(cand_ts)],
+    )
+    ev = StepEvent(
+        t0=st.t,
+        t1=t_next,
+        dt=dt,
+        kind=kind,
+        rate=rate,
+        active=active,
+        rem_before=st.rem_mi,
+        newly_started=newly_started,
+        newly_finished=newly_fin,
+        vm_mips=vm_mips,
+    )
+
+    st = st.replace(
+        t=t_next,
+        step=st.step + 1,
+        rem_mi=new_rem,
+        started=st.started | newly_started,
+        start_t=jnp.where(newly_started, st.t, st.start_t),
+        finish_t=jnp.where(newly_fin, t_next, st.finish_t),
+        cpu_time=st.cpu_time + jnp.where(active, dt, 0.0),
+    )
+
+    # --- instrument post hooks (market, energy, observers) ---
+    for i, ins in enumerate(instruments):
+        st, aux[i] = ins.post(scn, st, ev, aux[i])
+
+    return (st, tuple(aux)), ev
+
+
+def finalize_result(scn: Scenario, st: SimState) -> SimResult:
+    """Assemble the reported outcome from a final state (shared by drivers)."""
+    cls = scn.cloudlets
+    fin = policies.cloudlet_finished(st) & cls.exists
+    tat = jnp.where(fin, st.finish_t - cls.submit_t, INF)
+    n_fin = jnp.sum(fin.astype(jnp.int32))
+    mean_tat = jnp.sum(jnp.where(fin, tat, 0.0)) / jnp.maximum(n_fin, 1)
+    makespan = jnp.max(jnp.where(fin, st.finish_t, -INF), initial=-INF)
+    total_cost = jnp.sum(
+        st.cpu_cost + st.ram_cost + st.storage_cost + st.bw_cost
+    )
+    return SimResult(
+        finish_t=st.finish_t,
+        start_t=st.start_t,
+        turnaround=tat,
+        makespan=makespan,
+        mean_turnaround=mean_tat,
+        n_finished=n_fin,
+        n_events=st.step,
+        n_migrations=jnp.sum(st.vm_migrations),
+        vm_placed=st.vm_placed,
+        vm_dc=st.vm_dc,
+        vm_failed=st.vm_failed,
+        cpu_cost=st.cpu_cost,
+        ram_cost=st.ram_cost,
+        storage_cost=st.storage_cost,
+        bw_cost=st.bw_cost,
+        energy_j=st.energy_j,
+        total_cost=total_cost,
+        end_t=st.t,
+    )
+
+
+def finalize_outputs(
+    scn: Scenario, st: SimState, ctx: StepContext, aux: tuple
+) -> dict:
+    """Collect instrument outputs keyed by instrument name."""
+    out: dict = {}
+    for ins, a in zip(ctx.instruments, aux):
+        o = ins.finalize(scn, st, a)
+        if o:
+            out[ins.name] = o
+    return out

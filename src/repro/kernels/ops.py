@@ -24,9 +24,22 @@ def _on_tpu() -> bool:
 
 
 def advance_sweep(rem: Array, rate: Array, active: Array, bound_dt: Array):
-    """Engine advance sweep — Pallas twin of engine._advance_jnp."""
+    """Engine advance sweep — Pallas twin of ref.advance_sweep_ref."""
     return advance_sweep_pallas(
         rem, rate, active, bound_dt, interpret=not _on_tpu()
+    )
+
+
+def resolve_advance(impl: str):
+    """The single advance-sweep routing point (core.step.resolve_advance
+    defers here): ``"jnp"`` -> the fusable reference, ``"pallas"`` -> the
+    two-phase Mosaic kernel (interpret mode off-TPU)."""
+    if impl == "pallas":
+        return advance_sweep
+    if impl == "jnp":
+        return ref.advance_sweep_ref
+    raise ValueError(
+        f"unknown sweep_impl {impl!r}: expected 'jnp' or 'pallas'"
     )
 
 

@@ -1,0 +1,31 @@
+"""Suite-wide collection guards.
+
+The model/serving/training test modules import ``repro.dist`` (sharding
+rules + activation-sharding) at module scope.  That subsystem is not built
+yet (see ROADMAP.md open items): until it lands, importing those modules is
+a hard collection error that aborts ``pytest -x`` before the engine suite
+runs.  Skip collecting them — loudly — when ``repro.dist`` is absent, the
+same way test_engine.py importorskips ``hypothesis``.
+"""
+import importlib.util
+import warnings
+
+_NEEDS_REPRO_DIST = [
+    "test_dryrun_smoke.py",   # subprocess code strings import repro.dist
+    "test_hlo_walk.py",
+    "test_kernels.py",
+    "test_models.py",
+    "test_moe_dispatch.py",
+    "test_serving.py",
+    "test_sharding.py",
+    "test_system.py",
+    "test_train.py",
+]
+
+collect_ignore = []
+if importlib.util.find_spec("repro.dist") is None:
+    collect_ignore = list(_NEEDS_REPRO_DIST)
+    warnings.warn(
+        "repro.dist is not built yet: skipping collection of "
+        + ", ".join(_NEEDS_REPRO_DIST)
+    )

@@ -1,4 +1,5 @@
-"""Campaign API: trace variant + sharded execution (4-device subprocess)."""
+"""Campaign API: trace variant, chunked execution, stacking validation,
+sharded execution (4-device subprocess)."""
 import os
 import subprocess
 import sys
@@ -6,8 +7,16 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.core import SPACE_SHARED, TIME_SHARED, scenarios, simulate_trace
+from repro.core import (
+    SPACE_SHARED,
+    TIME_SHARED,
+    run_campaign,
+    scenarios,
+    simulate_trace,
+    stack_scenarios,
+)
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -28,6 +37,55 @@ def test_simulate_trace_progress_curves():
     first = np.array(scn.cloudlets.submit_t) == 0.0
     t_idx = int(np.searchsorted(np.array(ts), 750.0))
     assert np.allclose(prog[t_idx][first], 750.0 / 1200.0, atol=0.02)
+
+
+def test_chunked_campaign_matches_unchunked():
+    """Chunking (with per-chunk buffer donation + trailing-chunk padding)
+    must be invisible in the results — including a non-dividing chunk size."""
+    base = [scenarios.fig4_scenario(hp, vp) for hp in (0, 1) for vp in (0, 1)]
+    batched = stack_scenarios(base * 5)          # 20 scenarios
+    whole = run_campaign(batched)
+    for chunk in (4, 7, 32):                      # divides / ragged / > n
+        chunked = run_campaign(batched, chunk_size=chunk)
+        np.testing.assert_array_equal(
+            np.array(whole.finish_t), np.array(chunked.finish_t))
+        np.testing.assert_array_equal(
+            np.array(whole.total_cost), np.array(chunked.total_cost))
+
+
+def test_chunked_campaign_1024_scenarios():
+    """Acceptance: a >=1024-scenario fig4 campaign runs chunked end to end."""
+    base = [scenarios.fig4_scenario(hp, vp) for hp in (0, 1) for vp in (0, 1)]
+    batched = stack_scenarios(base * 256)         # 1024 scenarios
+    res = run_campaign(batched, chunk_size=128)
+    fin = np.array(res.n_finished)
+    assert fin.shape == (1024,)
+    assert (fin == 8).all()
+
+
+def test_run_campaign_rejects_bad_chunk_size():
+    batched = stack_scenarios([scenarios.fig4_scenario(0, 0)] * 2)
+    with pytest.raises(ValueError, match="chunk_size"):
+        run_campaign(batched, chunk_size=0)
+
+
+def test_stack_scenarios_validates_static_fields():
+    a = scenarios.fig4_scenario(0, 0)
+    with pytest.raises(ValueError, match="max_steps"):
+        stack_scenarios([a, a.replace(max_steps=512)])
+    with pytest.raises(ValueError, match="sweep_impl"):
+        stack_scenarios([a, a.replace(sweep_impl="pallas")])
+    with pytest.raises(ValueError, match="empty"):
+        stack_scenarios([])
+
+
+def test_stack_scenarios_validates_structure():
+    from repro.core.energy import PowerModel
+
+    a = scenarios.fig4_scenario(0, 0)
+    b = a.replace(power=PowerModel.uniform(1))
+    with pytest.raises(ValueError, match="structure"):
+        stack_scenarios([a, b])
 
 
 def test_run_campaign_sharded_subprocess():
