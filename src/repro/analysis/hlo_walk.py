@@ -60,6 +60,22 @@ def _shape_bytes(m: re.Match) -> int:
     return _DTYPE_BYTES.get(dt, 4) * _nelems(dims)
 
 
+def _split_operands(buf: str) -> list[str]:
+    """Split an operand list on top-level commas only: inline-typed operands
+    (``f32[32,64]{1,0} %x``) carry commas inside ``[]``/``{}``."""
+    out, depth, start = [], 0, 0
+    for i, ch in enumerate(buf):
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            out.append(buf[start:i])
+            start = i + 1
+    out.append(buf[start:])
+    return [t for t in out if t.strip()]
+
+
 @dataclasses.dataclass
 class WalkTotals:
     dot_flops: float = 0.0
@@ -151,7 +167,7 @@ class HloWalker:
             buf += ch
         defs = self.defs.get(comp, {})
         out = []
-        for tok in buf.split(","):
+        for tok in _split_operands(buf):
             tok = tok.strip()
             # inline-typed operand (unscheduled HLO): f32[8,16] %x
             ms = _SHAPE.match(tok)

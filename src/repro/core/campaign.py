@@ -16,21 +16,14 @@ chunk's buffers to XLA so working memory is bounded by one chunk.
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.engine import simulate
 from repro.core.entities import Scenario, SimResult
-
-try:  # jax >= 0.6 spells it jax.shard_map(check_vma=...)
-    _shard_map = jax.shard_map
-    _SMAP_COMPAT = {"check_vma": False}
-except AttributeError:  # jax 0.4.x: experimental, check_rep
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-    _SMAP_COMPAT = {"check_rep": False}
+from repro.dist.compat import shard_map as _shard_map
 
 
 def stack_scenarios(scenarios: list[Scenario]) -> Scenario:
@@ -69,8 +62,56 @@ def _campaign_len(batched: Scenario) -> int:
     return jax.tree.leaves(batched)[0].shape[0]
 
 
-_run_chunk = jax.jit(jax.vmap(simulate), donate_argnums=(0,))
 _run_whole = jax.jit(jax.vmap(simulate))
+
+
+# --------------------------------------------------------------------------
+# chunked execution with *effective* buffer donation
+#
+# Donating the whole Scenario pytree is a no-op that warns on every chunk
+# ("Some donated buffers were not usable"): XLA can only reuse a donated
+# input buffer for an output of identical shape/dtype, and most Scenario
+# leaves have no SimResult counterpart.  So the chunk runner donates exactly
+# the subset of leaves that CAN alias an output (matched by (shape, dtype)
+# multiset against eval_shape of the result) and passes the rest undonated.
+# tests/test_campaign.py promotes the donation UserWarning to an error, so a
+# regression to wholesale donation fails loudly.
+# --------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _donate_mask(treedef, avals: tuple) -> tuple[bool, ...]:
+    """Per-leaf: may this input buffer alias some output buffer?"""
+    chunk = jax.tree.unflatten(
+        treedef, [jax.ShapeDtypeStruct(s, d) for s, d in avals]
+    )
+    out = jax.eval_shape(jax.vmap(simulate), chunk)
+    budget: dict = {}
+    for leaf in jax.tree.leaves(out):
+        key = (leaf.shape, leaf.dtype)
+        budget[key] = budget.get(key, 0) + 1
+    mask = []
+    for s, d in avals:
+        n = budget.get((s, d), 0)
+        mask.append(n > 0)
+        if n:
+            budget[(s, d)] = n - 1
+    return tuple(mask)
+
+
+@partial(jax.jit, static_argnums=(2, 3), donate_argnums=(0,))
+def _run_chunk_split(donated, kept, mask, treedef):
+    it_d, it_k = iter(donated), iter(kept)
+    leaves = [next(it_d) if m else next(it_k) for m in mask]
+    return jax.vmap(simulate)(jax.tree.unflatten(treedef, leaves))
+
+
+def _run_chunk(chunk: Scenario) -> SimResult:
+    leaves, treedef = jax.tree.flatten(chunk)
+    avals = tuple((l.shape, l.dtype) for l in leaves)
+    mask = _donate_mask(treedef, avals)
+    donated = tuple(l for l, m in zip(leaves, mask) if m)
+    kept = tuple(l for l, m in zip(leaves, mask) if not m)
+    return _run_chunk_split(donated, kept, mask, treedef)
 
 
 def run_campaign(
@@ -80,9 +121,9 @@ def run_campaign(
 
     ``chunk_size`` bounds working memory: the campaign axis is processed in
     fixed-size chunks through one compiled program (the trailing chunk is
-    padded by repeating the last scenario, then trimmed), each chunk's input
-    buffers donated to XLA.  ``donate=True`` additionally donates the whole
-    stacked scenario on the unchunked path — only safe when the caller is
+    padded by repeating the last scenario, then trimmed), each chunk's
+    output-aliasable input buffers donated to XLA.  ``donate=True`` applies
+    the same donation to the unchunked path — only safe when the caller is
     done with ``batched``.
     """
     if chunk_size is None:
@@ -116,15 +157,15 @@ def run_campaign_sharded(batched: Scenario, mesh, axis: str = "data") -> SimResu
     pspec = jax.sharding.PartitionSpec(axis)
     sharding = jax.sharding.NamedSharding(mesh, pspec)
 
+    # while-loop carries mix varying (per-sim state) and unvarying (scalars
+    # broadcast inside the loop) types, so replication checking is off (the
+    # compat shim); correctness is per-shard independence, which
+    # vmap(simulate) guarantees
     @partial(
         _shard_map,
         mesh=mesh,
         in_specs=(pspec,),
         out_specs=pspec,
-        # while-loop carries mix varying (per-sim state) and unvarying
-        # (scalars broadcast inside the loop) types; correctness is per-shard
-        # independence, which vmap(simulate) guarantees
-        **_SMAP_COMPAT,
     )
     def _run(shard: Scenario) -> SimResult:
         return jax.vmap(simulate)(shard)

@@ -1,0 +1,84 @@
+"""Activation sharding: a context, a state query, and one constraint helper.
+
+Model code never names mesh axes — it annotates activations with *logical*
+axes (``"batch"``, ``"seq"``, ``"model"``, None) via ``shard_act``.  Outside
+an ``activation_shardings`` context ``shard_act`` is an exact no-op (returns
+its argument unchanged — the single-device test/CPU path adds zero ops to
+the jaxpr).  Inside the context it resolves logical axes against the active
+(mesh, rules) with the same divisibility fallback as the parameter rules and
+emits ``with_sharding_constraint``.
+
+``current_state()`` exposes the raw ``(mesh, rules, sequence_parallel)``
+triple for code that needs more than a constraint — models/moe.py picks its
+EP schedule from it, models/attention.py switches to the length-sharded
+flash-decoding path.  The state is trace-time only (a Python global, not a
+traced value): enter the context around ``jit``/``lower`` calls, as
+launch/dryrun.py does.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import Rules, _axis_sizes, _resolve_dim, rules_for_mesh
+
+_STATE: tuple | None = None  # (mesh, Rules, sequence_parallel)
+
+
+def current_state() -> tuple | None:
+    """The active (mesh, rules, sequence_parallel) triple, or None."""
+    return _STATE
+
+
+@contextmanager
+def activation_shardings(mesh, rules: Rules | None = None, *,
+                         sequence_parallel: bool = False,
+                         strategy: str = "2d"):
+    """Activate activation sharding for the enclosed trace/lower/jit calls."""
+    global _STATE
+    if rules is None:
+        rules = rules_for_mesh(mesh, strategy)
+    prev = _STATE
+    _STATE = (mesh, rules, bool(sequence_parallel))
+    try:
+        yield _STATE
+    finally:
+        _STATE = prev
+
+
+def shard_act(x, logical_axes):
+    """Constrain ``x`` to the active sharding; identity when no state is set.
+
+    ``logical_axes``: one entry per dim — ``"batch"`` (data axes),
+    ``"model"`` (tensor-parallel axis), ``"seq"`` (sequence parallelism:
+    the tp axis, active only when the context enabled it), or None.
+    """
+    state = _STATE
+    if state is None:
+        return x
+    mesh, rules, seq_par = state
+    sizes = _axis_sizes(mesh)
+    used: set = set()
+    entries = []
+    for dim, logical in zip(x.shape, logical_axes):
+        if logical is None:
+            entries.append(None)
+        elif logical == "batch":
+            entries.append(_resolve_dim(dim, rules.batch, sizes, used))
+        elif logical == "model":
+            entries.append(_resolve_dim(dim, (rules.tp,), sizes, used))
+        elif logical == "seq":
+            cand = (rules.tp,) if seq_par else ()
+            entries.append(_resolve_dim(dim, cand, sizes, used))
+        else:
+            raise ValueError(
+                f"unknown logical activation axis {logical!r}: "
+                "'batch' | 'seq' | 'model' | None"
+            )
+    if all(e is None for e in entries):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries))
+    )

@@ -1,0 +1,29 @@
+"""shard_map across jax versions — the single import point for the repo.
+
+jax >= 0.6 exposes ``jax.shard_map(..., check_vma=...)``; jax 0.4.x (this
+container: 0.4.37, see DESIGN.md) has ``jax.experimental.shard_map.shard_map``
+with the older ``check_rep`` spelling.  Both call sites in the tree
+(models/attention.py flash-decoding, models/moe.py EP dispatch,
+core/campaign.py sharded campaigns) run with replication checking disabled:
+their out_specs intentionally declare values replicated that the static
+checker cannot prove replicated (log-sum-exp merges computed identically on
+every shard from all-gathered stats).
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6
+    _shard_map = jax.shard_map
+    _CHECK_OFF = {"check_vma": False}
+except AttributeError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_OFF = {"check_rep": False}
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-portable shard_map with replication checking disabled."""
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **_CHECK_OFF
+    )

@@ -1,0 +1,226 @@
+"""Sharding rule trees: parameter/input PartitionSpecs from path+shape rules.
+
+The mesh mapping (DESIGN.md §6) assigns every array dimension a *logical*
+axis — ``tp`` (tensor parallel, the fast intra-pod ``"model"`` axis),
+``fsdp`` (parameter sharding over the ``"data"`` axis), ``batch`` (data
+parallelism over ``("pod", "data")``) — and resolves logical axes to mesh
+axes *per leaf* with a divisibility fallback: candidate axes are examined
+left-to-right and an axis is taken only if the dimension stays divisible by
+the accumulated axis product (axes that don't fit are skipped), so a
+dimension no candidate fits falls back to replication.  No mesh axis is ever used twice within one spec.  This is what
+lets ONE rule table serve every architecture in the pool on any mesh — the
+16x16 production pod, the 2x16x16 multi-pod mesh, and the 1-device CPU test
+mesh — without per-model spec tables (tests/test_sharding.py asserts
+validity for all archs).
+
+Rules are pattern-matched on the parameter *path* (``"/"``-joined tree keys,
+``re.search``) and, where one name is shared by different tensor ranks
+(``mlp/w_gate`` is ``[L, D, F]`` dense but ``[L, E, D, F]`` MoE), on the
+leaf's ndim.  Templates are right-aligned: leading stacking axes (the
+scan-over-periods ``L`` axis) are implicitly replicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Mesh-axis roles for one (mesh, strategy) pair.
+
+    ``tp``/``dp`` name single mesh axes (or None); ``batch`` is every axis
+    carrying data parallelism, slowest (inter-pod) first; ``fsdp`` is the
+    axis set parameters shard over.
+    """
+
+    tp: str | None
+    dp: str | None
+    batch: tuple[str, ...]
+    fsdp: tuple[str, ...]
+
+
+def _axis_sizes(mesh) -> dict:
+    """axis name -> size, for Mesh and AbstractMesh alike."""
+    return dict(mesh.shape)
+
+
+def rules_for_mesh(mesh, strategy: str = "2d") -> Rules:
+    """Role assignment for a mesh.
+
+    ``"2d"``: ``model`` is tensor-parallel, ``data`` (and ``pod`` when
+    present) carry batch + FSDP.  ``"fsdp"``: no tensor parallelism — every
+    axis is data parallel and parameters shard over all of them (consumers
+    such as models/moe.py check ``rules.tp is None`` to skip EP).
+    """
+    names = tuple(mesh.axis_names)
+    if strategy == "2d":
+        tp = "model" if "model" in names else None
+        batch = tuple(a for a in names if a != "model")
+        fsdp = ("data",) if "data" in names else batch
+        dp = "data" if "data" in names else (batch[0] if batch else None)
+        return Rules(tp=tp, dp=dp, batch=batch, fsdp=fsdp)
+    if strategy == "fsdp":
+        return Rules(tp=None, dp=names[0] if names else None,
+                     batch=names, fsdp=names)
+    raise ValueError(f"unknown sharding strategy {strategy!r}: '2d' | 'fsdp'")
+
+
+# ---------------------------------------------------------------------------
+# logical -> mesh axis resolution (the divisibility fallback)
+# ---------------------------------------------------------------------------
+
+def _resolve_dim(dim: int, candidates: tuple[str, ...], sizes: dict,
+                 used: set):
+    """Examine candidate axes left-to-right; take each axis only if ``dim``
+    stays divisible by the accumulated product (non-fitting axes are
+    skipped, not a hard stop).
+
+    Returns a spec entry: an axis name, a tuple of names, or None (fallback
+    to replication).  Axes already used in this spec are skipped — the
+    no-axis-reuse invariant.
+    """
+    picked: list[str] = []
+    prod = 1
+    for a in candidates:
+        if a is None or a not in sizes or a in used:
+            continue
+        if dim % (prod * sizes[a]) == 0:
+            picked.append(a)
+            prod *= sizes[a]
+    for a in picked:
+        used.add(a)
+    if not picked:
+        return None
+    return picked[0] if len(picked) == 1 else tuple(picked)
+
+
+def _spec_from_template(shape, template, rules: Rules, sizes: dict) -> P:
+    """Right-align ``template`` on ``shape`` and resolve logical axes."""
+    if len(template) > len(shape):
+        template = template[len(template) - len(shape):]
+    entries: list = [None] * (len(shape) - len(template))
+    used: set = set()
+    for dim, logical in zip(shape[len(shape) - len(template):], template):
+        if logical is None:
+            entries.append(None)
+        elif logical == "tp":
+            entries.append(_resolve_dim(dim, (rules.tp,), sizes, used))
+        elif logical == "fsdp":
+            entries.append(_resolve_dim(dim, rules.fsdp, sizes, used))
+        elif logical == "batch":
+            entries.append(_resolve_dim(dim, rules.batch, sizes, used))
+        else:
+            raise ValueError(f"unknown logical axis {logical!r}")
+    return P(*entries)
+
+
+# ---------------------------------------------------------------------------
+# rule tables
+# ---------------------------------------------------------------------------
+
+def _kv_cache_template(leaf):
+    """KV caches [..., B, H, S, Dh]: shard heads over tp when the head count
+    divides, else the LENGTH axis (the flash-decoding length-sharded layout
+    models/attention.py switches on), else neither."""
+
+    def build(rules: Rules, sizes: dict):
+        ntp = sizes.get(rules.tp, 1) if rules.tp else 1
+        H, S = leaf.shape[-3], leaf.shape[-2]
+        if ntp > 1 and H % ntp == 0:
+            return ("batch", "tp", None, None)
+        if ntp > 1 and S % ntp == 0:
+            return ("batch", None, "tp", None)
+        return ("batch", None, None, None)
+
+    return build
+
+# (regex, template) — first match wins.  A dict template selects by leaf
+# ndim (the "shape" half of path/shape matching); a callable receives the
+# leaf and returns a builder(rules, sizes) -> template.
+_PARAM_RULES = (
+    (r"(^|/)embed$", ("tp", "fsdp")),
+    (r"(^|/)head$", ("fsdp", "tp")),
+    (r"(enc_pos|dec_pos)$", ("fsdp", "tp")),
+    (r"mlp/router$", ()),
+    (r"mlp/w_(gate|up)$", {4: ("tp", None, "fsdp"),     # MoE [L, E, D, F]
+                           3: ("fsdp", "tp"),           # dense [L, D, F]
+                           2: ("fsdp", "tp")}),
+    (r"mlp/w_down$", {4: ("tp", "fsdp", None),          # MoE [L, E, F, D]
+                      3: ("tp", "fsdp"),
+                      2: ("tp", "fsdp")}),
+    (r"(wq|wk|wv|w_z|w_x|w_B|w_C|w_dt|w_gate|w_up)$", ("fsdp", "tp")),
+    (r"(wo|out_proj|w_down)$", ("tp", "fsdp")),
+    (r"conv_w$", (None, "tp")),
+)
+
+_INPUT_RULES = (
+    (r"(^|/)(tokens|labels)$", ("batch", None)),
+    (r"positions$", (None, "batch", None)),
+    (r"(frames|frontend_embeds)$", ("batch", None, "tp")),
+    (r"(^|/)token$", ("batch", None)),
+    (r"(^|/)pos$", ("batch",)),
+    (r"caches.*/(k|v|ck|cv)$", _kv_cache_template),
+    (r"caches.*/conv$", (None, "batch", None, "tp")),
+    (r"caches.*/state$", (None, "batch", None, None, "tp")),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _match_template(table, path: str, leaf):
+    for pattern, template in table:
+        if re.search(pattern, path):
+            if callable(template) and not isinstance(template, tuple):
+                return template(leaf)
+            if isinstance(template, dict):
+                return template.get(leaf.ndim, ())
+            return template
+    return ()  # unmatched -> replicate
+
+
+def _pspec_tree(tree, mesh, strategy: str, table) -> object:
+    rules = rules_for_mesh(mesh, strategy)
+    sizes = _axis_sizes(mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for path, leaf in flat:
+        template = _match_template(table, _path_str(path), leaf)
+        if callable(template) and not isinstance(template, tuple):
+            template = template(rules, sizes)
+        specs.append(_spec_from_template(leaf.shape, template, rules, sizes))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_pspec_tree(shapes, mesh, strategy: str = "2d"):
+    """PartitionSpec tree for a parameter pytree (ShapeDtypeStructs/arrays)."""
+    return _pspec_tree(shapes, mesh, strategy, _PARAM_RULES)
+
+
+def input_pspec_tree(specs, mesh, strategy: str = "2d"):
+    """PartitionSpec tree for Model.input_specs trees (batch/caches/token/pos)."""
+    return _pspec_tree(specs, mesh, strategy, _INPUT_RULES)
+
+
+def named(mesh, pspec_tree):
+    """PartitionSpec tree -> NamedSharding tree on a concrete mesh."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

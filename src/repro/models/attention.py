@@ -281,6 +281,8 @@ def _decode_flash_lsharded(cfg, mesh, rules, q, kT, vT, k_cache, v_cache,
     """
     from jax.sharding import PartitionSpec as P
 
+    from repro.dist.compat import shard_map
+
     tp = rules.tp
     ntp = mesh.shape[tp]
     B = q.shape[0]
@@ -340,7 +342,10 @@ def _decode_flash_lsharded(cfg, mesh, rules, q, kT, vT, k_cache, v_cache,
         out = out.reshape(b_loc, Hk * g, 1, cfg.d_head)
         return out.astype(kT.dtype), kc, vc
 
-    out, kc, vc = jax.shard_map(
+    # `out` IS replicated over tp (every shard computes the same merge from
+    # the gathered stats) — the compat shim disables the static replication
+    # checker, which can't see that
+    out, kc, vc = shard_map(
         local,
         mesh=mesh,
         in_specs=(
@@ -356,9 +361,6 @@ def _decode_flash_lsharded(cfg, mesh, rules, q, kT, vT, k_cache, v_cache,
             P(bspec, None, tp, None),
             P(bspec, None, tp, None),
         ),
-        # `out` IS replicated over tp (every shard computes the same merge
-        # from the gathered stats) — the static checker can't see that
-        check_vma=False,
     )(q, kT, vT, k_cache, v_cache, pos)
     out = jnp.swapaxes(out, 1, 2).reshape(B, 1, cfg.n_heads * cfg.d_head)
     return out, (kc, vc)

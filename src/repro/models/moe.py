@@ -33,6 +33,7 @@ from jax import Array
 from jax.sharding import PartitionSpec as P
 
 from repro.dist import act_sharding
+from repro.dist.compat import shard_map
 from repro.models import layers
 
 
@@ -213,7 +214,7 @@ def _moe_shard_map(params: dict, cfg, x: Array, state) -> tuple[Array, Array]:
         out = checkpoint_name(out, "remat_ckpt")
         return out, aux
 
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(

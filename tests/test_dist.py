@@ -1,0 +1,122 @@
+"""repro.dist contract tests: no-op guarantee, 1-device CI meshes, named().
+
+tests/test_sharding.py covers spec validity on the 16x16 production
+AbstractMesh; this module covers the other half of the contract — the
+subsystem must also be exactly inert outside its context and valid on the
+trivial meshes CPU CI actually runs on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from test_sharding import _check_specs
+
+from repro.configs import ARCH_IDS, get_config
+from repro.dist import (
+    activation_shardings,
+    current_state,
+    input_pspec_tree,
+    named,
+    param_pspec_tree,
+    rules_for_mesh,
+    shard_act,
+)
+from repro.launch.mesh import make_host_mesh
+from repro.models import DECODE_32K, TRAIN_4K, build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------------ no-op
+def test_shard_act_identity_eager():
+    x = jnp.arange(24.0).reshape(2, 3, 4)
+    assert current_state() is None
+    assert shard_act(x, ("batch", None, "model")) is x  # not even a copy
+
+
+def test_shard_act_identity_under_jit():
+    x = jnp.arange(24.0).reshape(2, 3, 4)
+    ident = jax.jit(lambda a: shard_act(a, ("batch", "seq", "model")))
+    np.testing.assert_array_equal(np.asarray(ident(x)), np.asarray(x))
+    # no constraint op in the jaxpr: bit-identical program, not just values
+    jaxpr = jax.make_jaxpr(lambda a: shard_act(a, ("batch", None, None)))(x)
+    assert not jaxpr.jaxpr.eqns, jaxpr
+
+
+def test_context_sets_and_restores_state():
+    mesh = make_host_mesh((1, 1))
+    assert current_state() is None
+    with activation_shardings(mesh, sequence_parallel=True) as st:
+        mesh_, rules, seq_par = current_state()
+        assert st == (mesh_, rules, seq_par)
+        assert mesh_ is mesh and seq_par is True
+        assert rules.tp == "model" and rules.batch == ("data",)
+    assert current_state() is None
+
+
+def test_shard_act_constrains_under_context():
+    """Inside the context on a 1-device mesh: same values, constraint applied."""
+    mesh = make_host_mesh((1, 1))
+    x = jnp.arange(24.0).reshape(2, 3, 4)
+    with activation_shardings(mesh):
+        f = jax.jit(lambda a: shard_act(a, ("batch", None, "model")) * 1.0)
+        out = f(x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_shard_act_rejects_unknown_logical_axis():
+    mesh = make_host_mesh((1, 1))
+    with activation_shardings(mesh):
+        with pytest.raises(ValueError, match="logical"):
+            shard_act(jnp.zeros((4, 4)), ("batch", "modle"))
+
+
+# --------------------------------------------------- 1-device CI meshes
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_specs_valid_on_trivial_mesh(arch):
+    """The same rule tables must produce valid specs on the 1-device mesh
+    CPU CI runs on (every divisibility fallback degenerates gracefully)."""
+    mesh = make_host_mesh((1, 1))
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, KEY)
+    _check_specs(shapes, param_pspec_tree(shapes, mesh), mesh)
+    for cell in (TRAIN_4K, DECODE_32K):
+        specs = model.input_specs(cell)
+        _check_specs(specs, input_pspec_tree(specs, mesh), mesh)
+
+
+def test_fsdp_strategy_has_no_tp():
+    mesh = make_host_mesh((1, 1))
+    rules = rules_for_mesh(mesh, "fsdp")
+    assert rules.tp is None
+    assert set(rules.batch) == {"data", "model"}
+    with pytest.raises(ValueError, match="strategy"):
+        rules_for_mesh(mesh, "3d")
+
+
+# ------------------------------------------------------------- named()
+def test_rules_round_trip_through_named():
+    """rules -> pspec tree -> NamedSharding tree: structure and specs survive."""
+    mesh = make_host_mesh((1, 1))
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, KEY)
+    specs = param_pspec_tree(shapes, mesh)
+    shardings = named(mesh, specs)
+    assert jax.tree.structure(shapes) == jax.tree.structure(
+        shardings, is_leaf=lambda x: isinstance(x, NamedSharding)
+    )
+    spec_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    shard_leaves = jax.tree.leaves(
+        shardings, is_leaf=lambda x: isinstance(x, NamedSharding)
+    )
+    for spec, sh in zip(spec_leaves, shard_leaves):
+        assert isinstance(sh, NamedSharding)
+        assert sh.mesh is mesh
+        assert sh.spec == spec
+    # and the shardings are usable: device_put a leaf through the tree
+    p = jax.device_put(jnp.zeros((cfg.vocab, cfg.d_model)), shard_leaves[0])
+    assert p.sharding.is_equivalent_to(shard_leaves[0], p.ndim)

@@ -49,6 +49,39 @@ assert aerr < 1e-4, aerr
     assert "ERR" in out
 
 
+def test_flash_decode_length_sharded_matches_local():
+    """attention_decode's flash-decoding path (KV cache sharded on LENGTH
+    because the kv-head count doesn't divide tp) == plain decode."""
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.configs import get_config
+from repro.models import build_model
+from repro.dist.act_sharding import activation_shardings
+
+cfg = get_config('internlm2-1.8b', smoke=True)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+B, S, L = 4, 8, 16
+toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab, jnp.int32)
+lg, caches = model.prefill(params, {"tokens": toks[:, :S-2]}, L)
+pos = jnp.full((B,), S-2, jnp.int32)
+lg1, caches1 = model.decode_step(params, caches, toks[:, S-2][:, None], pos)
+
+mesh = Mesh(np.array(jax.devices()).reshape(1, 4), ("data", "model"))
+# ntp=4: kv heads (2) don't divide, cache length (16) does -> flash path
+with mesh, activation_shardings(mesh):
+    lgS, cachesS = jax.jit(model.decode_step)(
+        params, caches, toks[:, S-2][:, None], pos)
+err = float(jnp.max(jnp.abs(lg1 - lgS)))
+ck = float(jnp.max(jnp.abs(caches1['sub0']['k'] - cachesS['sub0']['k'])))
+print("ERR", err, ck)
+assert err < 2e-3, err
+assert ck < 1e-5, ck
+""")
+    assert "ERR" in out
+
+
 @pytest.mark.parametrize("arch", ["internlm2-1.8b", "granite-moe-1b-a400m",
                                   "mamba2-130m"])
 def test_tiny_mesh_train_step_lowers(arch):

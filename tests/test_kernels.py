@@ -4,7 +4,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -29,10 +28,12 @@ def test_advance_sweep_shapes(c, block):
                                atol=1e-5)
 
 
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 1000), c=st.integers(1, 300))
-def test_advance_sweep_property(seed, c):
+# deterministic property sweep (hypothesis is absent in the container image;
+# each seed derives a random cloudlet count, covering the same space)
+@pytest.mark.parametrize("seed", range(20))
+def test_advance_sweep_property(seed):
     rng = np.random.default_rng(seed)
+    c = int(rng.integers(1, 301))
     rem = jnp.asarray(rng.uniform(0.01, 10, c).astype(np.float32))
     rate = jnp.asarray(rng.uniform(0, 2, c).astype(np.float32))
     active = jnp.asarray(rng.random(c) > 0.5)

@@ -13,9 +13,9 @@ def _fake_mesh(shape, axes):
     """Abstract mesh for spec derivation only (no real devices needed)."""
     from jax.sharding import AbstractMesh
     try:
-        return AbstractMesh(shape, axes)
+        return AbstractMesh(shape, axes)          # jax >= 0.5
     except TypeError:
-        return AbstractMesh(dict(zip(axes, shape)))
+        return AbstractMesh(tuple(zip(axes, shape)))  # jax 0.4.x: (name, size) pairs
 
 
 MESH = _fake_mesh((16, 16), ("data", "model"))
