@@ -1,0 +1,110 @@
+"""Dynamic workloads + auto-scaling: turnaround under generated load.
+
+Beyond-paper rows for the abstract's "varying load" and "automatic scaling"
+claims (DESIGN.md §7): one bursty service-routed scenario simulated with the
+pool autoscaler on vs off (same compiled program — the flag is traced), plus
+a vmapped arrival-rate x scale-up-threshold grid, reported as throughput.
+
+    PYTHONPATH=src python -m benchmarks.autoscale_workload
+
+Writes ``BENCH_autoscale.json``.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    broadcast_campaign,
+    run_campaign,
+    scenarios,
+    simulate_instrumented,
+    workload,
+)
+
+OUT_PATH = "BENCH_autoscale.json"
+
+
+def bench_demo(seed: int = 0) -> dict:
+    fn = jax.jit(simulate_instrumented)
+    rows = {}
+    for name, auto in (("autoscaled", True), ("static", False)):
+        scn = scenarios.autoscale_scenario(
+            jax.random.PRNGKey(seed), autoscale=auto)
+        res, out = fn(scn)
+        jax.block_until_ready(res)
+        rows[name] = {
+            "n_finished": int(res.n_finished),
+            "mean_turnaround_s": float(res.mean_turnaround),
+            "makespan_s": float(res.makespan),
+            "n_scale_up": int(out["autoscale"]["n_scale_up"]),
+            "n_scale_down": int(out["autoscale"]["n_scale_down"]),
+        }
+    rows["turnaround_improvement"] = 1.0 - (
+        rows["autoscaled"]["mean_turnaround_s"]
+        / rows["static"]["mean_turnaround_s"]
+    )
+    return rows
+
+
+def bench_grid(n_rates: int = 8, n_threshs: int = 8, n_cloudlets: int = 48,
+               n_rep: int = 3) -> dict:
+    """The campaign surface: K = n_rates x n_threshs scenarios in one vmap."""
+    k = n_rates * n_threshs
+    template = scenarios.autoscale_scenario(jax.random.PRNGKey(0))
+    rates = jnp.tile(jnp.linspace(0.05, 0.2, n_rates), n_threshs)
+    ups = jnp.repeat(jnp.linspace(0.3, 1.0, n_threshs), n_rates)
+    keys = jax.random.split(jax.random.PRNGKey(7), k)
+    cls = jax.vmap(lambda key, r: workload.generate_cloudlets(
+        key, n_cloudlets, kind="bursty", n_bursts=3, rate=r,
+        off_gap_mean=800.0, median_mi=60_000.0, sigma_mi=0.3, n_vms=None,
+    ))(keys, rates)
+    pol = jax.vmap(
+        lambda u: template.policy.replace(scale_up_thresh=u))(ups)
+    batched = broadcast_campaign(template, k, cloudlets=cls, policy=pol)
+
+    res = run_campaign(batched)                      # compile + warm
+    jax.block_until_ready(res)
+    t0 = time.perf_counter()
+    for _ in range(n_rep):
+        res = run_campaign(batched)
+        jax.block_until_ready(res)
+    wall = (time.perf_counter() - t0) / n_rep
+    tat = np.array(res.mean_turnaround)
+    return {
+        "grid_points": k,
+        "wall_s": wall,
+        "scenarios_per_s": k / wall,
+        "all_finished": bool((np.array(res.n_finished) == n_cloudlets).all()),
+        "mean_turnaround_min_s": float(tat.min()),
+        "mean_turnaround_max_s": float(tat.max()),
+    }
+
+
+def run() -> dict:
+    return {
+        "backend": jax.default_backend(),
+        "demo_bursty": bench_demo(),
+        "grid_rate_x_thresh": bench_grid(),
+    }
+
+
+def main() -> None:
+    report = run()
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {OUT_PATH}")
+    d = report["demo_bursty"]
+    print(f"autoscale,demo,improvement={d['turnaround_improvement']:.3f},"
+          f"up={d['autoscaled']['n_scale_up']}")
+    g = report["grid_rate_x_thresh"]
+    print(f"autoscale,grid,points={g['grid_points']},"
+          f"scenarios_per_s={g['scenarios_per_s']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Bench-regression gate: fail CI when engine throughput drops vs baseline.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --baseline BENCH_baseline.json --fresh BENCH_engine.json
+
+Compares the *jnp*-path throughput metrics of a fresh ``BENCH_engine.json``
+(benchmarks/engine_sweep.py) against the committed ``BENCH_baseline.json``:
+
+* ``advance_sweep_kernel.jnp.cloudlets_per_s`` — raw fused-sweep throughput
+* ``engine_fig9_10.jnp.events_per_s``          — full-engine event rate
+
+Only the jnp path gates: the Pallas twin runs in interpret mode on CPU CI,
+so its wall time is a correctness seat, not a perf claim (DESIGN.md §4).
+The tolerance is deliberately generous (default: fail below 0.5x baseline)
+because shared CI runners are noisy — this catches "the hot path got 3x
+slower" regressions, not 10% wiggles.  Exit status is the contract: 0 ok,
+1 regression, 2 missing/contradictory inputs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GATED = (
+    ("advance_sweep_kernel", "jnp", "cloudlets_per_s"),
+    ("engine_fig9_10", "jnp", "events_per_s"),
+)
+
+
+def _get(report: dict, path: tuple[str, ...], src: str) -> float:
+    node = report
+    for p in path:
+        if not isinstance(node, dict) or p not in node:
+            raise KeyError(f"{src}: missing {'/'.join(path)}")
+        node = node[p]
+    value = float(node)
+    if value <= 0:
+        raise ValueError(f"{src}: non-positive {'/'.join(path)} = {value}")
+    return value
+
+
+def check(baseline: dict, fresh: dict, tol: float) -> list[str]:
+    """Return a list of human-readable failures (empty = gate passes)."""
+    failures = []
+    for path in GATED:
+        base = _get(baseline, path, "baseline")
+        new = _get(fresh, path, "fresh")
+        ratio = new / base
+        line = f"{'/'.join(path)}: {new:.6g} vs baseline {base:.6g} ({ratio:.2f}x)"
+        if ratio < tol:
+            failures.append(f"REGRESSION {line} < {tol}x")
+        else:
+            print(f"ok {line}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--fresh", default="BENCH_engine.json")
+    ap.add_argument("--tol", type=float, default=0.5,
+                    help="fail when fresh/baseline falls below this ratio")
+    args = ap.parse_args(argv)
+
+    reports = {}
+    for name, path in (("baseline", args.baseline), ("fresh", args.fresh)):
+        try:
+            with open(path) as f:
+                reports[name] = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"error: cannot read {name} report {path!r}: {e}",
+                  file=sys.stderr)
+            return 2
+
+    try:
+        failures = check(reports["baseline"], reports["fresh"], args.tol)
+    except (KeyError, ValueError) as e:
+        print(f"error: malformed report: {e}", file=sys.stderr)
+        return 2
+    for line in failures:
+        print(line, file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

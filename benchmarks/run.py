@@ -3,58 +3,94 @@
     PYTHONPATH=src python -m benchmarks.run
 
 Emits ``name,metric,value[,paper_value]`` CSV-ish lines so EXPERIMENTS.md
-tables regenerate mechanically.  The dry-run/roofline sweep is separate
-(repro.launch.dryrun) because it needs the 512-device XLA flag.
+tables regenerate mechanically, aggregates every per-benchmark JSON into one
+``BENCH_report.json``, and exits nonzero if any section raised — a crashed
+benchmark used to leave its stale JSON behind for CI to upload as if fresh;
+now the stale file is deleted up front, the failure is recorded in the
+aggregate report, and the build fails.  The dry-run/roofline sweep is
+separate (repro.launch.dryrun) because it needs the 512-device XLA flag.
 """
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
+import traceback
+
+# (section title, module under benchmarks/, JSON artifact or None)
+SECTIONS = (
+    ("Figure 7/8: instantiation time & memory (100 -> 100k hosts)",
+     "fig7_8_instantiation", None),
+    ("Figure 9/10: space- vs time-shared task execution",
+     "fig9_10_scheduling", None),
+    ("Table 1: federated vs non-federated clouds",
+     "table1_federation", None),
+    ("Campaign throughput (beyond paper: vmapped simulations)",
+     "campaign_throughput", None),
+    ("Engine advance-sweep: jnp vs Pallas (-> BENCH_engine.json)",
+     "engine_sweep", "BENCH_engine.json"),
+    ("Dynamic workloads + auto-scaling (-> BENCH_autoscale.json)",
+     "autoscale_workload", "BENCH_autoscale.json"),
+    ("Serving scheduler (beyond paper: CloudSim-driven batching)",
+     "serving_sched", None),
+    ("Energy + topology (the paper's future work, implemented)",
+     "energy_topology", None),
+)
+
+REPORT_PATH = "BENCH_report.json"
 
 
-def _section(title: str):
-    print(f"\n# --- {title} ---")
-
-
-def main() -> None:
+def main() -> int:
     t_all = time.time()
+    report: dict = {"sections": {}, "ok": True}
 
-    _section("Figure 7/8: instantiation time & memory (100 -> 100k hosts)")
-    from benchmarks import fig7_8_instantiation
+    # A benchmark that crashes must not leave last run's JSON lying around
+    # looking fresh.
+    for _, _, artifact in SECTIONS:
+        if artifact and os.path.exists(artifact):
+            os.remove(artifact)
 
-    fig7_8_instantiation.main()
+    for title, mod_name, artifact in SECTIONS:
+        print(f"\n# --- {title} ---")
+        entry: dict = {"title": title}
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
+            mod.main()
+            entry["status"] = "ok"
+        except Exception:
+            traceback.print_exc()
+            entry["status"] = "error"
+            entry["error"] = traceback.format_exc(limit=20)
+            report["ok"] = False
+        entry["wall_s"] = round(time.time() - t0, 3)
+        if artifact:
+            try:
+                with open(artifact) as f:
+                    entry["artifact"] = {"path": artifact, "data": json.load(f)}
+            except (OSError, json.JSONDecodeError) as e:
+                # missing or truncated artifact: record, don't crash the
+                # aggregator — that is the failure mode this driver exists
+                # to surface
+                if entry["status"] == "ok":
+                    entry["status"] = "error"
+                    entry["error"] = f"artifact {artifact} unreadable: {e}"
+                    report["ok"] = False
+        report["sections"][mod_name] = entry
 
-    _section("Figure 9/10: space- vs time-shared task execution")
-    from benchmarks import fig9_10_scheduling
-
-    fig9_10_scheduling.main()
-
-    _section("Table 1: federated vs non-federated clouds")
-    from benchmarks import table1_federation
-
-    table1_federation.main()
-
-    _section("Campaign throughput (beyond paper: vmapped simulations)")
-    from benchmarks import campaign_throughput
-
-    campaign_throughput.main()
-
-    _section("Engine advance-sweep: jnp vs Pallas (-> BENCH_engine.json)")
-    from benchmarks import engine_sweep
-
-    engine_sweep.main()
-
-    _section("Serving scheduler (beyond paper: CloudSim-driven batching)")
-    from benchmarks import serving_sched
-
-    serving_sched.main()
-
-    _section("Energy + topology (the paper's future work, implemented)")
-    from benchmarks import energy_topology
-
-    energy_topology.main()
-
-    print(f"\n# total wall time: {time.time() - t_all:.1f}s")
+    report["total_wall_s"] = round(time.time() - t_all, 1)
+    with open(REPORT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"\n# wrote {REPORT_PATH}")
+    print(f"# total wall time: {report['total_wall_s']:.1f}s")
+    failed = [m for m, e in report["sections"].items()
+              if e["status"] != "ok"]
+    if failed:
+        print(f"# FAILED sections: {', '.join(failed)}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -33,23 +33,39 @@ from repro.core.engine import (
     simulate_trace,
 )
 from repro.core.step import (
+    AutoscaleInstrument,
     Instrument,
     StepEvent,
     TraceInstrument,
     UtilizationTimelineInstrument,
     event_step,
 )
-from repro.core.campaign import run_campaign, run_campaign_sharded, stack_scenarios
-from repro.core import energy, policies, provision, scenarios, segments, step
+from repro.core.campaign import (
+    broadcast_campaign,
+    run_campaign,
+    run_campaign_sharded,
+    stack_scenarios,
+)
+from repro.core import (
+    energy,
+    policies,
+    provision,
+    scenarios,
+    segments,
+    step,
+    workload,
+)
 
 __all__ = [
     "INF", "SPACE_SHARED", "TIME_SHARED",
     "Cloudlets", "Hosts", "Market", "Policy", "Scenario",
     "SimResult", "SimState", "VMRequests", "finished_mask",
-    "History", "Instrument", "StepEvent",
+    "AutoscaleInstrument", "History", "Instrument", "StepEvent",
     "TraceInstrument", "UtilizationTimelineInstrument",
     "init_state", "event_step",
     "simulate", "simulate_history", "simulate_instrumented", "simulate_trace",
-    "run_campaign", "run_campaign_sharded", "stack_scenarios",
+    "broadcast_campaign", "run_campaign", "run_campaign_sharded",
+    "stack_scenarios",
     "energy", "policies", "provision", "scenarios", "segments", "step",
+    "workload",
 ]

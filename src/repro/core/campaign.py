@@ -62,6 +62,39 @@ def _campaign_len(batched: Scenario) -> int:
     return jax.tree.leaves(batched)[0].shape[0]
 
 
+def broadcast_campaign(template: Scenario, n: int, **overrides) -> Scenario:
+    """Broadcast one Scenario to an ``n``-point campaign, substituting the
+    batched subtrees that actually vary.
+
+    The grid builder for generated workloads: infrastructure/market leaves
+    broadcast to a leading campaign axis; vmapped-generated ``cloudlets=``
+    and swept ``policy=`` pytrees (leading axis ``n``) replace their
+    broadcast counterparts.  Static fields pass through untouched, so the
+    result feeds straight into ``run_campaign`` — e.g. a 64-point
+    arrival-rate x scale-threshold sweep in one vmap:
+
+        keys = jax.random.split(key, 64)
+        cls = jax.vmap(lambda k, r: workload.generate_cloudlets(k, C, rate=r)
+                       )(keys, rates)
+        pol = jax.vmap(lambda u: template.policy.replace(scale_up_thresh=u)
+                       )(threshs)
+        res = run_campaign(broadcast_campaign(template, 64,
+                                              cloudlets=cls, policy=pol))
+    """
+    batched = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n,) + jnp.shape(x)), template
+    )
+    for name, sub in overrides.items():
+        for leaf in jax.tree.leaves(sub):
+            if jnp.ndim(leaf) == 0 or jnp.shape(leaf)[0] != n:
+                raise ValueError(
+                    f"broadcast_campaign: override {name!r} has a leaf of "
+                    f"shape {jnp.shape(leaf)}; every leaf needs leading dim "
+                    f"{n} (vmap the builder over the campaign axis)"
+                )
+    return batched.replace(**overrides)
+
+
 _run_whole = jax.jit(jax.vmap(simulate))
 
 

@@ -71,10 +71,13 @@ def init_state(scn: Scenario) -> SimState:
         vm_avail_t=jnp.full((V,), INF, f32),
         vm_released=jnp.zeros((V,), bool),
         vm_migrations=jnp.zeros((V,), i32),
+        pool_active=jnp.zeros((V,), bool),
         free_ram=jnp.where(hosts.exists, hosts.ram_mb, 0.0),
         free_storage=jnp.where(hosts.exists, hosts.storage_mb, 0.0),
         free_bw=jnp.where(hosts.exists, hosts.bw_mbps, 0.0),
         free_cores=jnp.where(hosts.exists, hosts.cores.astype(f32), 0.0),
+        cl_vm=cls.vm.astype(i32),
+        cl_ready_t=jnp.where(cls.vm >= 0, step_mod.ready_times(scn), INF),
         rem_mi=jnp.where(cls.exists, cls.length_mi, 0.0),
         started=jnp.zeros((C,), bool),
         start_t=jnp.full((C,), INF, f32),

@@ -68,6 +68,8 @@ class VMRequests:
     request_t: Array   # [V] f32  when the broker asks for the VM
     image_mb: Array    # [V] f32  VM image size — migration transfer volume
     exists: Array      # [V] bool
+    pool: Array        # [V] bool spare auto-scaling rows: held inactive until
+                       #          the AutoscaleInstrument activates them
 
     @property
     def n_vms(self) -> int:
@@ -82,9 +84,14 @@ class Cloudlets:
     cloudlet needing ``cores`` PEs advances on each of them at its share rate.
     Rows must be ordered by ``submit_t`` (ties by row) — FCFS below is row
     order, exactly CloudSim's arrival-ordered queues.
+
+    ``vm == -1`` marks a *service-routed* row: the broker dispatches it at
+    submit time to the least-loaded active VM (including activated pool VMs),
+    which is what makes horizontal auto-scaling visible to the application
+    (DESIGN.md §7).  ``vm >= 0`` rows keep CloudSim's fixed binding.
     """
 
-    vm: Array         # [C] i32  target VM
+    vm: Array         # [C] i32  target VM (-1: broker-dispatched at submit)
     length_mi: Array  # [C] f32
     cores: Array      # [C] i32
     submit_t: Array   # [C] f32
@@ -120,6 +127,11 @@ class Policy:
     migration_fixed_s: Array  # scalar f32: fixed VM re-creation latency
     interdc_bw_mbps: Array    # scalar f32: inter-datacenter link for migration
     horizon: Array            # scalar f32: simulation end time
+    autoscale: Array          # scalar bool: AutoscaleInstrument acts on the pool
+    scale_up_thresh: Array    # scalar f32: sustained DC utilization above this
+                              #             activates one pool VM per DC
+    scale_down_thresh: Array  # scalar f32: DC utilization below this releases
+                              #             one idle pool VM per DC (0 disables)
 
 
 @pytree_dataclass(static=("max_steps", "sweep_impl"))
@@ -161,12 +173,17 @@ class SimState:
     vm_avail_t: Array    # [V] f32 creation/migration completes at this time
     vm_released: Array   # [V] bool resources returned after all work done
     vm_migrations: Array # [V] i32
+    pool_active: Array   # [V] bool pool row activated by the autoscaler
+                         #          (inactive -> activating -> active -> released)
     # --- host free capacity (provisioner view) ---
     free_ram: Array      # [D,H] f32
     free_storage: Array  # [D,H] f32
     free_bw: Array       # [D,H] f32
     free_cores: Array    # [D,H] f32 (only enforced when core_reserving)
     # --- cloudlet execution ---
+    cl_vm: Array         # [C] i32 current VM assignment; rows submitted with
+                         #         vm == -1 are broker-dispatched at submit time
+    cl_ready_t: Array    # [C] f32 stage-in completes (INF until dispatched)
     rem_mi: Array        # [C] f32 remaining million-instructions (per core)
     started: Array       # [C] bool
     start_t: Array       # [C] f32 (INF until started)
@@ -189,6 +206,8 @@ class SimResult:
 
     finish_t: Array      # [C]
     start_t: Array       # [C]
+    cl_vm: Array         # [C] final VM binding (service rows: the broker's
+                         #     dispatch choice; -1 if never dispatched)
     turnaround: Array    # [C] finish - submit (INF for never-finished)
     makespan: Array      # scalar: max finish over finished cloudlets
     mean_turnaround: Array  # scalar over finished cloudlets

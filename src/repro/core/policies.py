@@ -30,12 +30,13 @@ from repro.core import segments
 
 
 def cloudlet_ready(scn: Scenario, state: SimState) -> Array:
-    """[C] bool — submitted and staged-in (SANStorage input transfer done)."""
-    bw = jnp.maximum(scn.vms.bw_mbps[scn.cloudlets.vm], 1e-6)
-    stage_in = jnp.where(
-        scn.cloudlets.input_mb > 0, scn.cloudlets.input_mb / bw, 0.0
-    )
-    return (state.t >= scn.cloudlets.submit_t + stage_in) & scn.cloudlets.exists
+    """[C] bool — dispatched and staged-in (SANStorage input transfer done).
+
+    ``cl_ready_t`` is state, not schedule: fixed-binding rows carry their
+    precomputed submit + stage-in time from ``init_state``; service-routed
+    rows hold INF until the broker dispatches them (step.py).
+    """
+    return (state.t >= state.cl_ready_t) & scn.cloudlets.exists
 
 
 def cloudlet_finished(state: SimState) -> Array:
@@ -48,15 +49,28 @@ def vm_done(scn: Scenario, state: SimState) -> Array:
     A "done" VM releases its cores (CloudSim destroys VMs whose workload
     completed) — this is what lets Figure 4a's VM2 start after VM1 drains.
     VMs with no cloudlets idle forever (broker never destroys them here).
+
+    Two auto-scaling refinements (DESIGN.md §7): while any service-routed
+    cloudlet is still undispatched, no VM is done — every eligible VM is a
+    potential dispatch target, and destroying drained VMs could leave a late
+    service burst with an empty fleet (service rows would never run).  The
+    cost is deliberate: in mixed fixed+service scenarios, a drained
+    fixed-binding VM holds its slot until the last service row dispatches.
+    And pool VMs are destroyed only by the autoscaler's scale-down (their
+    "done" is ``vm_released``), never by workload drain — an idle pool VM
+    holds its slot until utilization says otherwise.
     """
     V = scn.vms.n_vms
+    assigned = state.cl_vm >= 0
     cl_fin = cloudlet_finished(state) | ~scn.cloudlets.exists
-    seg = jnp.where(scn.cloudlets.exists, scn.cloudlets.vm, V)
+    seg = jnp.where(scn.cloudlets.exists & assigned, state.cl_vm, V)
     all_fin = segments.segment_all(cl_fin, seg, V)
     has_work = segments.segment_sum(
-        scn.cloudlets.exists.astype(jnp.float32), seg, V
+        (scn.cloudlets.exists & assigned).astype(jnp.float32), seg, V
     ) > 0
-    return has_work & all_fin
+    pending = jnp.any(scn.cloudlets.exists & ~assigned)
+    done = has_work & all_fin & ~pending
+    return jnp.where(scn.vms.pool, state.vm_released, done)
 
 
 def host_level_mips(scn: Scenario, state: SimState) -> Array:
@@ -111,10 +125,15 @@ def cloudlet_rates(scn: Scenario, state: SimState) -> tuple[Array, Array]:
 
     vm_mips = host_level_mips(scn, state)
 
+    # The effective binding: fixed rows carry their Cloudlets.vm from init,
+    # service rows the broker's dispatch choice (undispatched rows are not
+    # ready, so the clipped gather below never grants them capacity).
+    vmi = jnp.clip(state.cl_vm, 0, V - 1)
+
     ready = cloudlet_ready(scn, state)
     fin = cloudlet_finished(state)
     occ = ready & ~fin & scn.cloudlets.exists
-    seg = jnp.where(occ, cls.vm, V)
+    seg = jnp.where(occ, vmi, V)
     cl_cores_f = cls.cores.astype(jnp.float32)
     vm_cores_f = jnp.maximum(vms.cores.astype(jnp.float32), 1.0)
 
@@ -122,16 +141,16 @@ def cloudlet_rates(scn: Scenario, state: SimState) -> tuple[Array, Array]:
 
     # --- space-shared inside the VM (Fig 4a/b upper): FCFS core occupancy ---
     prefix = segments.segment_prefix_sum(jnp.where(occ, cl_cores_f, 0.0), seg, V)
-    fits = prefix + cl_cores_f <= vms.cores[cls.vm].astype(jnp.float32) + 1e-6
-    space = jnp.where(occ & fits, percore_capacity[cls.vm], 0.0)
+    fits = prefix + cl_cores_f <= vms.cores[vmi].astype(jnp.float32) + 1e-6
+    space = jnp.where(occ & fits, percore_capacity[vmi], 0.0)
 
     # --- time-shared inside the VM (Fig 4b/d): equal per-core share ---
     total_demand = segments.segment_sum(jnp.where(occ, cl_cores_f, 0.0), seg, V)
     denom = jnp.maximum(total_demand, vms.cores.astype(jnp.float32))
     share = vm_mips / jnp.maximum(denom, 1e-9)           # per demanded core
-    time = jnp.where(occ, share[cls.vm], 0.0)
+    time = jnp.where(occ, share[vmi], 0.0)
 
     rate = jnp.where(scn.policy.vm_policy == TIME_SHARED, time, space)
     # A cloudlet only runs while its VM is granted capacity.
-    rate = jnp.where(vm_mips[cls.vm] > 0, rate, 0.0)
+    rate = jnp.where(vm_mips[vmi] > 0, rate, 0.0)
     return rate, vm_mips

@@ -23,13 +23,11 @@ import jax.numpy as jnp
 from jax import Array
 
 from repro.core.entities import INF, Scenario, SimState
-from repro.core import policies
+from repro.core import policies, segments
 
 
-def release_done_vms(scn: Scenario, state: SimState) -> SimState:
-    """Return resources of VMs whose entire workload finished (auto-destroy)."""
-    done = policies.vm_done(scn, state)
-    newly = done & state.vm_placed & ~state.vm_released
+def _return_resources(scn: Scenario, state: SimState, newly: Array) -> SimState:
+    """Give the host resources of ``newly``-released VM rows back."""
     d = jnp.clip(state.vm_dc, 0, scn.hosts.n_dc - 1)
     h = jnp.clip(state.vm_host, 0, scn.hosts.n_hosts - 1)
     w = newly.astype(jnp.float32)
@@ -40,6 +38,29 @@ def release_done_vms(scn: Scenario, state: SimState) -> SimState:
         free_cores=state.free_cores.at[d, h].add(w * scn.vms.cores),
         vm_released=state.vm_released | newly,
     )
+
+
+def release_done_vms(scn: Scenario, state: SimState) -> SimState:
+    """Return resources of VMs whose entire workload finished (auto-destroy).
+
+    Pool VMs are exempt: ``vm_done`` reports them done only once released, so
+    the autoscaler's scale-down (``release_pool_vms``) is the sole destroyer.
+    """
+    done = policies.vm_done(scn, state)
+    newly = done & state.vm_placed & ~state.vm_released
+    return _return_resources(scn, state, newly)
+
+
+def release_pool_vms(scn: Scenario, state: SimState, rel: Array) -> SimState:
+    """Scale-down commit: release the ``rel``-masked pool VMs.
+
+    Terminal per the pool lifecycle (inactive -> activating -> active ->
+    released, DESIGN.md §7): the row stays ``vm_placed`` so the provisioner
+    never re-creates it — fixed shapes, no row recycling.
+    """
+    newly = rel & state.vm_placed & ~state.vm_released
+    state = _return_resources(scn, state, newly)
+    return state.replace(pool_active=state.pool_active & ~newly)
 
 
 def provision_due_vms(scn: Scenario, state: SimState) -> tuple[SimState, Array]:
@@ -55,8 +76,11 @@ def provision_due_vms(scn: Scenario, state: SimState) -> tuple[SimState, Array]:
     D, H = hosts.cores.shape
 
     def place_one(st: SimState, v: Array) -> tuple[SimState, Array]:
+        # Pool rows are due only once the autoscaler activates them; regular
+        # rows at their broker request time.
         due = (
             (vms.request_t[v] <= st.t)
+            & (~vms.pool[v] | st.pool_active[v])
             & ~st.vm_placed[v]
             & ~st.vm_failed[v]
             & vms.exists[v]
@@ -137,13 +161,17 @@ def provision_due_vms(scn: Scenario, state: SimState) -> tuple[SimState, Array]:
         dsafe = jnp.where(found, dsel, 0)
         hsafe = jnp.where(found, hsel, 0)
 
+        # Pool activations pay the usual fixed VM-creation latency (the image
+        # must boot); ordinary rows are created instantly at home, as before.
+        boot = jnp.where(vms.pool[v], pol.migration_fixed_s, 0.0)
         st = st.replace(
             vm_host=st.vm_host.at[v].set(jnp.where(found, hsel, st.vm_host[v])),
             vm_dc=st.vm_dc.at[v].set(jnp.where(found, dsel, st.vm_dc[v])),
             vm_placed=st.vm_placed.at[v].set(st.vm_placed[v] | found),
             vm_failed=st.vm_failed.at[v].set(st.vm_failed[v] | (due & ~found)),
             vm_avail_t=st.vm_avail_t.at[v].set(
-                jnp.where(found, st.t + jnp.where(migrated, delay, 0.0),
+                jnp.where(found,
+                          st.t + boot + jnp.where(migrated, delay, 0.0),
                           st.vm_avail_t[v])
             ),
             vm_migrations=st.vm_migrations.at[v].add(migrated.astype(jnp.int32)),
@@ -173,6 +201,93 @@ def provision_due_vms(scn: Scenario, state: SimState) -> tuple[SimState, Array]:
         place_one, state, jnp.arange(vms.n_vms, dtype=jnp.int32)
     )
     return state, jnp.sum(placed.astype(jnp.int32))
+
+
+def eligible_dispatch_vms(scn: Scenario, state: SimState) -> Array:
+    """[V] bool — VMs the broker may route service cloudlets to.
+
+    Booting VMs (placed, ``vm_avail_t`` in the future) are eligible: the work
+    queues on them and starts when the image is up, exactly like a fixed
+    binding submitted before its VM finished creating.
+    """
+    return (
+        scn.vms.exists
+        & state.vm_placed
+        & ~state.vm_failed
+        & ~state.vm_released
+        & (~scn.vms.pool | state.pool_active)
+    )
+
+
+def dispatch_cloudlets(scn: Scenario, state: SimState) -> SimState:
+    """Broker dispatch: bind submitted service-routed rows (``vm == -1``).
+
+    Each newly-due row goes to an eligible VM by least outstanding work:
+    eligible VMs are ranked by assigned-but-unfinished MI per unit capacity
+    and the k-th new arrival takes the k-th rank (mod the eligible count), so
+    one event's batch of arrivals spreads instead of piling onto one argmin.
+    If nothing is eligible the rows stay unassigned and retry at the next
+    event.  Assignments are permanent — no re-balancing of queued work.
+    """
+    cls, vms = scn.cloudlets, scn.vms
+    V = vms.n_vms
+    due = cls.exists & (state.cl_vm < 0) & (cls.submit_t <= state.t)
+    eligible = eligible_dispatch_vms(scn, state)
+    n_elig = jnp.sum(eligible.astype(jnp.int32))
+
+    seg = jnp.where(cls.exists & (state.cl_vm >= 0), state.cl_vm, V)
+    outstanding = segments.segment_sum(
+        jnp.where(policies.cloudlet_finished(state), 0.0, state.rem_mi), seg, V
+    )
+    cap = jnp.maximum(vms.cores.astype(jnp.float32) * vms.mips, 1e-9)
+    load_key = jnp.where(eligible, outstanding / cap, INF)
+    vm_order = jnp.argsort(load_key)                     # least-loaded first
+
+    k = jnp.cumsum(due.astype(jnp.int32)) - 1            # rank among new rows
+    chosen = vm_order[jnp.where(n_elig > 0, k % jnp.maximum(n_elig, 1), 0)]
+    ok = due & (n_elig > 0)
+    bw = jnp.maximum(vms.bw_mbps[jnp.clip(chosen, 0, V - 1)], 1e-6)
+    stage_in = jnp.where(cls.input_mb > 0, cls.input_mb / bw, 0.0)
+    return state.replace(
+        cl_vm=jnp.where(ok, chosen, state.cl_vm),
+        cl_ready_t=jnp.where(ok, state.t + stage_in, state.cl_ready_t),
+    )
+
+
+def demand_load(scn: Scenario, state: SimState) -> Array:
+    """[D] ready-but-unfinished MIPS demand / DC capacity — the autoscaler's
+    pressure signal.
+
+    Allocation-based utilization (energy.dc_utilization) cannot drive
+    scale-up: space-shared grants are activity-independent, so an idle fleet
+    reads as busy.  Demand counts every ready, unfinished cloudlet's desired
+    consumption (cores x its VM's MIPS) whether or not the host throttles it,
+    so queued work pushes the reading above 1 — run-queue pressure, exactly
+    what threshold scaling should react to (DESIGN.md §7).
+    """
+    cls, vms = scn.cloudlets, scn.vms
+    D = scn.hosts.n_dc
+    V = vms.n_vms
+    vmi = jnp.clip(state.cl_vm, 0, V - 1)
+    want = (
+        cls.exists
+        & policies.cloudlet_ready(scn, state)
+        & ~policies.cloudlet_finished(state)
+    )
+    mips_want = cls.cores.astype(jnp.float32) * vms.mips[vmi]
+    dc = jnp.clip(state.vm_dc[vmi], 0, D - 1)
+    demand = jnp.zeros((D,), jnp.float32).at[dc].add(
+        jnp.where(want, mips_want, 0.0)
+    )
+    cap = jnp.sum(
+        jnp.where(
+            scn.hosts.exists,
+            scn.hosts.cores.astype(jnp.float32) * scn.hosts.mips,
+            0.0,
+        ),
+        axis=1,
+    )
+    return demand / jnp.maximum(cap, 1e-9)
 
 
 def sense_load(scn: Scenario, state: SimState) -> Array:

@@ -6,9 +6,15 @@
 * ``fig9_10_scenario``: 10 000 hosts, 50 VMs, 500 cloudlets in groups of 50
   every 10 simulated minutes; space- vs time-shared cloudlet scheduling.
 * ``table1_scenario``: 3 federated datacenters, migration on saturation.
+* ``generated_scenario``: seeded dynamic workload (core/workload.py) over a
+  fixed fleet — Poisson / diurnal / bursty arrival processes.
+* ``autoscale_scenario``: bursty service-routed workload + a spare-VM pool
+  driven by the threshold autoscaler (DESIGN.md §7).
 
-All builders produce numpy-backed pytrees; nothing touches devices until the
-engine is jitted, so a 100k-host scenario costs megabytes (Figure 8 redone).
+All static-workload builders produce numpy-backed pytrees; nothing touches
+devices until the engine is jitted, so a 100k-host scenario costs megabytes
+(Figure 8 redone).  The generator-backed builders take a ``jax.random`` key
+and emit traced workloads, so campaigns vmap over seeds and rates.
 """
 from __future__ import annotations
 
@@ -40,6 +46,9 @@ def make_policy(
     migration_fixed_s: float = 30.0,
     interdc_bw_mbps: float = 100.0,
     horizon: float = 1e7,
+    autoscale: bool = False,
+    scale_up_thresh: float = 0.75,
+    scale_down_thresh: float = 0.0,
 ) -> Policy:
     return Policy(
         host_policy=jnp.asarray(host_policy, jnp.int32),
@@ -51,6 +60,9 @@ def make_policy(
         migration_fixed_s=jnp.asarray(migration_fixed_s, jnp.float32),
         interdc_bw_mbps=jnp.asarray(interdc_bw_mbps, jnp.float32),
         horizon=jnp.asarray(horizon, jnp.float32),
+        autoscale=jnp.asarray(autoscale, bool),
+        scale_up_thresh=jnp.asarray(scale_up_thresh, jnp.float32),
+        scale_down_thresh=jnp.asarray(scale_down_thresh, jnp.float32),
     )
 
 
@@ -86,6 +98,7 @@ def uniform_vms(
     bw_mbps: float = 100.0,
     request_t: float | np.ndarray = 0.0,
     image_mb: float = 1024.0,
+    pool: bool | np.ndarray = False,
 ) -> VMRequests:
     return VMRequests(
         dc=jnp.broadcast_to(jnp.asarray(dc, _I), (n,)),
@@ -97,6 +110,7 @@ def uniform_vms(
         request_t=jnp.broadcast_to(jnp.asarray(request_t, _F), (n,)),
         image_mb=jnp.full((n,), image_mb, _F),
         exists=jnp.ones((n,), bool),
+        pool=jnp.broadcast_to(jnp.asarray(pool, bool), (n,)),
     )
 
 
@@ -244,3 +258,83 @@ def table1_scenario(federation: bool, n_dc: int = 3, hosts_per_dc: int = 10,
     return Scenario(hosts=hosts, vms=vms, cloudlets=cls,
                     market=uniform_market(n_dc),
                     policy=pol, max_steps=4 * (total_vms + n_vms) + 1200)
+
+
+# ---------------------------------------------------------------------------
+# Generator-backed scenarios (dynamic workloads + auto-scaling, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def generated_scenario(key, kind: str = "poisson", n_cloudlets: int = 64,
+                       n_vms: int = 8, n_hosts: int = 8, rate: float = 0.1,
+                       median_mi: float = 30_000.0, mips: float = 1000.0,
+                       vm_policy: int = SPACE_SHARED,
+                       **gen_kw) -> Scenario:
+    """A seeded dynamic workload (Poisson/diurnal/bursty) over a fixed fleet,
+    routed round-robin — the paper's "varying load" without elasticity."""
+    from repro.core import workload
+
+    hosts = uniform_hosts(1, n_hosts, cores=1, mips=mips, ram_mb=1024.0,
+                          storage_mb=2_000_000.0)
+    vms = uniform_vms(n_vms, mips=mips, ram_mb=512.0, storage_mb=1024.0)
+    cls = workload.generate_cloudlets(
+        key, n_cloudlets, kind=kind, rate=rate, median_mi=median_mi,
+        n_vms=n_vms, **gen_kw)
+    pol = make_policy(host_policy=SPACE_SHARED, vm_policy=vm_policy,
+                      core_reserving=True)
+    return Scenario(hosts=hosts, vms=vms, cloudlets=cls,
+                    market=uniform_market(1), policy=pol,
+                    max_steps=4 * (n_cloudlets + n_vms) + 400)
+
+
+def autoscale_scenario(key, *, n_base: int = 4, n_pool: int = 4,
+                       n_cloudlets: int = 48, n_bursts: int = 3,
+                       burst_rate: float = 0.1, off_gap_mean: float = 800.0,
+                       median_mi: float = 60_000.0, sigma_mi: float = 0.3,
+                       mips: float = 1000.0, autoscale: bool = True,
+                       scale_up_thresh: float = 0.6,
+                       scale_down_thresh: float = 0.0,
+                       sensor_interval: float = 20.0,
+                       boot_s: float = 30.0,
+                       max_steps: int | None = None) -> Scenario:
+    """Bursty service-routed workload + a spare-VM pool under the threshold
+    autoscaler (DESIGN.md §7) — the abstract's "automatic scaling".
+
+    One DC of ``n_base + n_pool`` single-core hosts; each VM owns a host
+    (core-reserving space-shared).  Cloudlets are ``vm == -1``: the broker
+    dispatches each arrival to the least-loaded active VM, so activated pool
+    VMs actually absorb load.  Defaults overload the base fleet ~1.5x during
+    a burst (16 jobs x 60s work arriving over ~160s across 4 base VMs), which
+    the pool absorbs once demand stays over ``scale_up_thresh`` for a full
+    sensor interval.  ``autoscale=False`` (or sweeping the traced policy
+    flag) is the static-fleet control — same compilation either way.
+    """
+    from repro.core import workload
+
+    n_vms = n_base + n_pool
+    hosts = uniform_hosts(1, n_vms, cores=1, mips=mips, ram_mb=1024.0,
+                          storage_mb=2_000_000.0)
+    vms = uniform_vms(
+        n_vms, mips=mips, ram_mb=512.0, storage_mb=1024.0,
+        pool=np.arange(n_vms) >= n_base)
+    cls = workload.generate_cloudlets(
+        key, n_cloudlets, kind="bursty", n_bursts=n_bursts, rate=burst_rate,
+        off_gap_mean=off_gap_mean, median_mi=median_mi, sigma_mi=sigma_mi,
+        n_vms=None)
+    pol = make_policy(
+        host_policy=SPACE_SHARED, vm_policy=SPACE_SHARED,
+        core_reserving=True, sensor_interval=sensor_interval,
+        migration_fixed_s=boot_s, autoscale=autoscale,
+        scale_up_thresh=scale_up_thresh, scale_down_thresh=scale_down_thresh)
+    if max_steps is None:
+        # arrivals + completions + lifecycle, plus one K_SCALE tick per
+        # sensor interval over a generous estimate of the active span
+        span = 2.0 * n_bursts * (
+            off_gap_mean + n_cloudlets / n_bursts / burst_rate
+        ) + 4.0 * median_mi / mips
+        max_steps = 4 * (n_cloudlets + n_vms) + int(span / sensor_interval) + 200
+    from repro.core.step import AutoscaleInstrument
+
+    return Scenario(hosts=hosts, vms=vms, cloudlets=cls,
+                    market=uniform_market(1), policy=pol,
+                    instruments=(AutoscaleInstrument(),),
+                    max_steps=max_steps)

@@ -29,7 +29,7 @@ from typing import Callable
 import jax.numpy as jnp
 from jax import Array
 
-from repro.core import policies, provision
+from repro.core import policies, provision, segments
 from repro.kernels import ops as _kernel_ops
 from repro.core.entities import (
     INF,
@@ -47,6 +47,7 @@ K_MIGRATION = 3    # a VM creation/migration transfer completed
 K_TICK = 4         # a federation Sensor refresh
 K_INSTRUMENT = 5   # a custom instrument clock stop
 K_HORIZON = 6      # the simulation horizon
+K_SCALE = 7        # an autoscaler evaluation tick (AutoscaleInstrument)
 
 
 def default_max_steps(scn: Scenario) -> int:
@@ -87,7 +88,8 @@ def _min_where(x: Array, mask: Array) -> Array:
 
 def _done_or_doomed(scn: Scenario, st: SimState) -> Array:
     fin = policies.cloudlet_finished(st)
-    doomed = st.vm_failed[scn.cloudlets.vm]
+    assigned = st.cl_vm >= 0
+    doomed = assigned & st.vm_failed[jnp.clip(st.cl_vm, 0, scn.vms.n_vms - 1)]
     return fin | doomed | ~scn.cloudlets.exists
 
 
@@ -101,11 +103,17 @@ def step_cond(scn: Scenario, st: SimState, max_steps: int) -> Array:
 
 
 def ready_times(scn: Scenario) -> Array:
-    """[C] submit + SAN stage-in: when each cloudlet may start executing."""
+    """[C] submit + SAN stage-in: when each cloudlet may start executing.
+
+    Only meaningful for fixed-binding rows (``vm >= 0``); ``init_state`` sets
+    service-routed rows to INF until the broker dispatches them, at which
+    point the stage-in clock starts against the assigned VM's bandwidth.
+    """
     cls, vms = scn.cloudlets, scn.vms
+    vmi = jnp.clip(cls.vm, 0, vms.n_vms - 1)
     stage_in = jnp.where(
         cls.input_mb > 0,
-        cls.input_mb / jnp.maximum(vms.bw_mbps[cls.vm], 1e-6),
+        cls.input_mb / jnp.maximum(vms.bw_mbps[vmi], 1e-6),
         0.0,
     )
     return cls.submit_t + stage_in
@@ -211,7 +219,9 @@ class MarketInstrument(Instrument):
 
     def post(self, scn: Scenario, st: SimState, ev: StepEvent, aux):
         cls = scn.cloudlets
-        dc_of_cl = st.vm_dc[cls.vm]
+        # Bill against the dispatched assignment (== cls.vm for fixed rows);
+        # unassigned rows are never active and never hit an IO edge.
+        dc_of_cl = st.vm_dc[jnp.clip(st.cl_vm, 0, scn.vms.n_vms - 1)]
         run_cost = jnp.where(
             ev.active, ev.dt * scn.market.cost_per_cpu_sec[dc_of_cl], 0.0
         )
@@ -243,6 +253,96 @@ class EnergyInstrument(Instrument):
 
         watts = energy_mod.power_draw(scn, st, vm_mips=ev.vm_mips)
         return st.replace(energy_j=st.energy_j + watts * ev.dt), aux
+
+
+@pytree_dataclass
+class AutoscaleInstrument(Instrument):
+    """Threshold-based horizontal scaling over the pre-declared VM pool.
+
+    Every ``sensor_interval`` (a ``K_SCALE`` clock stop, so the loop never
+    jumps across an evaluation) the autoscaler reads per-DC *demand*
+    utilization (``provision.demand_load`` — queued work counts fully, so
+    the signal is run-queue pressure, not allocation):
+
+    * **scale up** — demand above ``scale_up_thresh`` at two consecutive
+      ticks (i.e. sustained for a full sensor interval) activates the
+      lowest-index inactive pool VM of that DC; the provisioner places it in
+      the same step and it boots with the usual fixed creation latency.
+    * **scale down** — demand below ``scale_down_thresh`` releases one
+      idle (booted, no outstanding work) pool VM of that DC.  Release is
+      terminal: inactive -> activating -> active -> released (DESIGN.md §7).
+
+    All decisions are traced data (``Policy.autoscale`` gates everything), so
+    one compilation serves autoscaled and static runs alike and campaigns
+    vmap over arrival-rate x threshold grids.  The tick count depends on the
+    traced horizon, so scenarios attaching this instrument must set
+    ``Scenario.max_steps`` explicitly, like the federation builders do.
+    """
+
+    name = "autoscale"
+    bound_kind = K_SCALE
+
+    def init(self, scn: Scenario):
+        D = scn.hosts.n_dc
+        return (
+            jnp.asarray(0.0, jnp.float32),   # last evaluation time
+            jnp.zeros((D,), bool),           # was over-threshold at last tick
+            jnp.asarray(0, jnp.int32),       # activations
+            jnp.asarray(0, jnp.int32),       # releases
+        )
+
+    def pre(self, scn: Scenario, st: SimState, aux):
+        last_t, over_prev, n_up, n_down = aux
+        pol, vms = scn.policy, scn.vms
+        V, D = vms.n_vms, scn.hosts.n_dc
+        due = pol.autoscale & (st.t >= last_t + pol.sensor_interval)
+        util = provision.demand_load(scn, st)                           # [D]
+        over = util > pol.scale_up_thresh
+        under = util < pol.scale_down_thresh
+        rows = jnp.arange(V)
+
+        # scale up: sustained pressure activates one inactive pool row per DC
+        want_up = due & over & over_prev                                # [D]
+        cand_up = (
+            vms.pool & vms.exists & ~st.pool_active & ~st.vm_placed
+            & ~st.vm_failed & want_up[vms.dc]
+        )
+        first_up = jnp.full((D,), V).at[vms.dc].min(
+            jnp.where(cand_up, rows, V)
+        )
+        act = cand_up & (rows == first_up[vms.dc])
+
+        # scale down: one idle booted pool row per under-pressure DC
+        dc_now = jnp.clip(st.vm_dc, 0, D - 1)
+        seg = jnp.where(scn.cloudlets.exists & (st.cl_vm >= 0), st.cl_vm, V)
+        busy = segments.segment_sum(
+            (~policies.cloudlet_finished(st)).astype(jnp.float32), seg, V
+        ) > 0
+        cand_down = (
+            vms.pool & st.pool_active & st.vm_placed & ~st.vm_released
+            & (st.vm_avail_t <= st.t) & ~busy & (due & under)[dc_now]
+        )
+        first_down = jnp.full((D,), V).at[dc_now].min(
+            jnp.where(cand_down, rows, V)
+        )
+        rel = cand_down & (rows == first_down[dc_now])
+
+        st = provision.release_pool_vms(scn, st, rel)
+        st = st.replace(pool_active=st.pool_active | act)
+        aux = (
+            jnp.where(due, st.t, last_t),
+            jnp.where(due, over, over_prev),
+            n_up + jnp.sum(act.astype(jnp.int32)),
+            n_down + jnp.sum(rel.astype(jnp.int32)),
+        )
+        return st, aux
+
+    def bound(self, scn: Scenario, st: SimState, aux) -> Array:
+        pol = scn.policy
+        return jnp.where(pol.autoscale, aux[0] + pol.sensor_interval, INF)
+
+    def finalize(self, scn: Scenario, st: SimState, aux) -> dict:
+        return {"n_scale_up": aux[2], "n_scale_down": aux[3]}
 
 
 @pytree_dataclass
@@ -337,11 +437,12 @@ def default_instruments() -> tuple[Instrument, ...]:
 class StepContext:
     """Loop-invariant context resolved once per driver.
 
-    ``advance`` is static (it keys the jit cache: jnp vs Pallas); ``ready_t``
-    and the instrument tuple are traced data, so campaigns may vmap over them.
+    ``advance`` is static (it keys the jit cache: jnp vs Pallas); the
+    instrument tuple is traced data, so campaigns may vmap over it.  (Ready
+    times are *state* now — ``SimState.cl_ready_t`` — because service-routed
+    rows learn theirs only at dispatch.)
     """
 
-    ready_t: Array                 # [C] precomputed stage-in completion times
     instruments: tuple             # tuple[Instrument, ...]
     advance: Callable = None
 
@@ -365,7 +466,6 @@ def make_context(
             "by name — give each instance a distinct `name` class attr"
         )
     ctx = StepContext(
-        ready_t=ready_times(scn),
         instruments=instruments,
         advance=resolve_advance(scn),
     )
@@ -395,20 +495,28 @@ def event_step(
     st = provision.release_done_vms(scn, st)
     st, _ = provision.provision_due_vms(scn, st)
 
+    # --- broker dispatch: bind due service-routed cloudlets (vm == -1) ---
+    st = provision.dispatch_cloudlets(scn, st)
+
     # --- the updateVMsProcessing sweep: rates for every task unit ---
     rate, vm_mips = policies.cloudlet_rates(scn, st)
     active = rate > 0
 
     # --- next event bound from non-completion sources ---
-    unready = cls.exists & (ctx.ready_t > st.t)
-    unplaced = vms.exists & ~st.vm_placed & ~st.vm_failed
+    unready = cls.exists & (st.cl_ready_t > st.t)
+    undispatched = cls.exists & (st.cl_vm < 0) & (cls.submit_t > st.t)
+    unplaced = (
+        vms.exists & ~st.vm_placed & ~st.vm_failed
+        & (~vms.pool | st.pool_active)
+    )
     migrating = vms.exists & st.vm_placed & (st.vm_avail_t > st.t)
     cand_t = [
-        _min_where(ctx.ready_t, unready),
+        _min_where(st.cl_ready_t, unready),
+        _min_where(cls.submit_t, undispatched),
         _min_where(vms.request_t, unplaced),
         _min_where(st.vm_avail_t, migrating),
     ]
-    cand_k = [K_READY, K_VM_REQUEST, K_MIGRATION]
+    cand_k = [K_READY, K_READY, K_VM_REQUEST, K_MIGRATION]
     for i, ins in enumerate(instruments):
         cand_t.append(ins.bound(scn, st, aux[i]))
         cand_k.append(ins.bound_kind)
@@ -475,6 +583,7 @@ def finalize_result(scn: Scenario, st: SimState) -> SimResult:
     return SimResult(
         finish_t=st.finish_t,
         start_t=st.start_t,
+        cl_vm=st.cl_vm,
         turnaround=tat,
         makespan=makespan,
         mean_turnaround=mean_tat,

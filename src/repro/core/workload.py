@@ -1,0 +1,182 @@
+"""Seeded dynamic-workload generators (the paper's "varying load").
+
+The abstract promises simulation of *varying load* and *automatic
+application scaling*; CloudSim's companion paper (arXiv:0903.2525) makes
+dynamic workload generation a first-class feature.  This module provides the
+arrival-process grammar (DESIGN.md §7):
+
+* ``poisson_arrivals``  — homogeneous Poisson: iid exponential gaps.
+* ``diurnal_arrivals``  — sinusoid-modulated non-homogeneous Poisson via
+                          time-rescaling: unit-rate arrivals pushed through
+                          the inverse cumulative intensity Λ⁻¹ (bisection —
+                          fixed iteration count, so jit/vmap-safe).
+* ``bursty_arrivals``   — on/off bursts: exponential off-gaps between bursts,
+                          within-burst gaps at ``burst_rate``.
+
+Everything is a pure function of a ``jax.random`` key with **static shapes**
+(the arrival *count* is the shape; the *times* are traced), so campaigns
+vmap over seeds and over traced rate/shape parameters in one compilation —
+same key ⇒ bit-identical workload (tests/test_workload.py).
+
+``generate_cloudlets`` assembles a full ``Cloudlets`` table: arrivals plus
+lognormal lengths and IO sizes, routed either round-robin over a fixed VM
+fleet or *service-routed* (``vm == -1``: the broker dispatches each arrival
+to the least-loaded active VM — the binding auto-scaling acts through).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core.entities import Cloudlets
+
+_TWO_PI = 6.2831853
+
+
+def poisson_arrivals(key: Array, n: int, rate) -> Array:
+    """[n] sorted arrival times of a homogeneous Poisson process."""
+    rate = jnp.maximum(jnp.asarray(rate, jnp.float32), 1e-9)
+    gaps = jax.random.exponential(key, (n,), jnp.float32) / rate
+    return jnp.cumsum(gaps)
+
+
+def diurnal_arrivals(
+    key: Array, n: int, base_rate, amp=0.8, period=1000.0, iters: int = 60
+) -> Array:
+    """[n] arrivals of a non-homogeneous Poisson process with intensity
+    ``λ(t) = base_rate · (1 + amp·sin(2πt/period))``, ``0 <= amp < 1``.
+
+    Time-rescaling: if S_k are unit-rate Poisson arrivals, Λ⁻¹(S_k) has
+    intensity λ.  Λ is monotone, so Λ⁻¹ is a fixed-count vectorized
+    bisection — no data-dependent control flow, vmappable over traced
+    ``base_rate``/``amp``/``period``.
+    """
+    base = jnp.maximum(jnp.asarray(base_rate, jnp.float32), 1e-9)
+    amp = jnp.clip(jnp.asarray(amp, jnp.float32), 0.0, 0.999)
+    period = jnp.maximum(jnp.asarray(period, jnp.float32), 1e-6)
+    s = jnp.cumsum(jax.random.exponential(key, (n,), jnp.float32))
+
+    def cum_intensity(t):
+        osc = (1.0 - jnp.cos(_TWO_PI * t / period)) * period / _TWO_PI
+        return base * (t + amp * osc)
+
+    # Λ(t) >= base·(1-amp)·t bounds the search interval from above.
+    lo = jnp.zeros_like(s)
+    hi = jnp.broadcast_to(s[-1] / (base * (1.0 - amp)) + period, s.shape)
+
+    def bisect(_, lo_hi):
+        lo, hi = lo_hi
+        mid = 0.5 * (lo + hi)
+        below = cum_intensity(mid) < s
+        return jnp.where(below, mid, lo), jnp.where(below, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, bisect, (lo, hi))
+    return 0.5 * (lo + hi)
+
+
+def bursty_arrivals(
+    key: Array, n_bursts: int, per_burst: int, burst_rate, off_gap_mean
+) -> Array:
+    """[n_bursts·per_burst] on/off arrivals: bursts of ``per_burst`` jobs at
+    ``burst_rate`` separated by exponential off-gaps of mean ``off_gap_mean``.
+
+    Built as cumulative (gap, burst-duration) sums, so the output is sorted
+    by construction and every quantity stays traced.
+    """
+    k_gap, k_in = jax.random.split(key)
+    rate = jnp.maximum(jnp.asarray(burst_rate, jnp.float32), 1e-9)
+    off = jnp.maximum(jnp.asarray(off_gap_mean, jnp.float32), 0.0)
+    gaps = jax.random.exponential(k_gap, (n_bursts,), jnp.float32) * off
+    intra = jax.random.exponential(
+        k_in, (n_bursts, per_burst), jnp.float32) / rate
+    within = jnp.cumsum(intra, axis=1)                  # offsets inside a burst
+    dur = within[:, -1]
+    starts = jnp.cumsum(gaps) + jnp.concatenate(
+        [jnp.zeros((1,), jnp.float32), jnp.cumsum(dur)[:-1]]
+    )
+    return (starts[:, None] + within).reshape(-1)
+
+
+def lognormal(key: Array, n: int, median, sigma) -> Array:
+    """[n] lognormal samples with the given median and log-space sigma."""
+    med = jnp.asarray(median, jnp.float32)
+    return med * jnp.exp(
+        jnp.asarray(sigma, jnp.float32) * jax.random.normal(key, (n,), jnp.float32)
+    )
+
+
+def assemble_cloudlets(
+    vm: Array, length_mi: Array, submit_t: Array,
+    cores=1, input_mb=0.0, output_mb=0.0,
+) -> Cloudlets:
+    """Traced twin of ``scenarios.make_cloudlets``: jnp sort by submit time
+    (FCFS is row order downstream), everything vmappable."""
+    n = submit_t.shape[0]
+    order = jnp.argsort(submit_t, stable=True)
+    bcast = lambda x, dt: jnp.broadcast_to(jnp.asarray(x, dt), (n,))[order]
+    return Cloudlets(
+        vm=bcast(vm, jnp.int32),
+        length_mi=bcast(length_mi, jnp.float32),
+        cores=bcast(cores, jnp.int32),
+        submit_t=jnp.asarray(submit_t, jnp.float32)[order],
+        input_mb=bcast(input_mb, jnp.float32),
+        output_mb=bcast(output_mb, jnp.float32),
+        exists=jnp.ones((n,), bool),
+    )
+
+
+def generate_cloudlets(
+    key: Array,
+    n: int,
+    *,
+    kind: str = "poisson",
+    rate=1.0,
+    amp=0.8,
+    period=1000.0,
+    n_bursts: int = 4,
+    off_gap_mean=500.0,
+    median_mi=10_000.0,
+    sigma_mi=0.5,
+    io_mb=0.0,
+    sigma_io=0.5,
+    n_vms: int | None = None,
+    cores: int = 1,
+) -> Cloudlets:
+    """One seeded dynamic workload -> a ``Cloudlets`` table.
+
+    ``kind``/``n``/``n_bursts``/``n_vms`` are static (shapes and routing
+    structure); every other parameter is traced, so campaigns vmap over
+    ``(key, rate, …)`` grids.  ``n_vms=None`` emits service-routed rows
+    (``vm == -1``, broker-dispatched); an int routes round-robin over that
+    fleet.  For ``kind="bursty"``, ``n`` must divide into ``n_bursts`` and
+    ``rate`` is the within-burst rate.
+    """
+    k_arr, k_len, k_in, k_out = jax.random.split(key, 4)
+    if kind == "poisson":
+        submit = poisson_arrivals(k_arr, n, rate)
+    elif kind == "diurnal":
+        submit = diurnal_arrivals(k_arr, n, rate, amp=amp, period=period)
+    elif kind == "bursty":
+        if n % n_bursts:
+            raise ValueError(f"n={n} not divisible by n_bursts={n_bursts}")
+        submit = bursty_arrivals(
+            k_arr, n_bursts, n // n_bursts, rate, off_gap_mean)
+    else:
+        raise ValueError(f"unknown arrival kind {kind!r}")
+
+    length = lognormal(k_len, n, median_mi, sigma_mi)
+    io_scale = jnp.asarray(io_mb, jnp.float32)
+    input_mb = io_scale * jnp.exp(
+        jnp.asarray(sigma_io, jnp.float32)
+        * jax.random.normal(k_in, (n,), jnp.float32))
+    output_mb = io_scale * jnp.exp(
+        jnp.asarray(sigma_io, jnp.float32)
+        * jax.random.normal(k_out, (n,), jnp.float32))
+    vm = (
+        jnp.full((n,), -1, jnp.int32) if n_vms is None
+        else jnp.arange(n, dtype=jnp.int32) % n_vms
+    )
+    return assemble_cloudlets(
+        vm, length, submit, cores=cores, input_mb=input_mb, output_mb=output_mb
+    )

@@ -23,9 +23,10 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # Donation must actually apply: a donated-but-unusable buffer means the
 # advertised per-chunk reuse silently regressed to a no-op (see the
 # _donate_mask machinery in core/campaign.py).
-pytestmark = pytest.mark.filterwarnings(
-    "error:Some donated buffers were not usable"
-)
+pytestmark = [
+    pytest.mark.tier1,
+    pytest.mark.filterwarnings("error:Some donated buffers were not usable"),
+]
 
 
 def test_simulate_trace_progress_curves():

@@ -8,6 +8,8 @@ import pytest
 
 from repro.ckpt import AsyncSaver, latest_step, restore, save
 
+pytestmark = pytest.mark.tier1
+
 
 def _tree(seed=0):
     k = jax.random.PRNGKey(seed)

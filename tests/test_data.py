@@ -3,6 +3,10 @@ import numpy as np
 
 from repro.data import MarkovSource, ShardedLoader
 
+import pytest
+
+pytestmark = pytest.mark.tier1
+
 
 def test_deterministic_stream():
     a = ShardedLoader(100, 4, 16, seed=5)

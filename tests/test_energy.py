@@ -6,6 +6,10 @@ import numpy as np
 from repro.core import scenarios, simulate
 from repro.core.energy import PowerModel, Topology
 
+import pytest
+
+pytestmark = pytest.mark.tier1
+
 
 def _with_models(fed=True, lat=5.0, bw=50.0):
     scn = scenarios.table1_scenario(fed)

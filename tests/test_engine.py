@@ -17,6 +17,8 @@ from repro.core import (
     run_campaign,
 )
 
+pytestmark = pytest.mark.tier1
+
 
 def _random_scenario(rng: np.random.Generator, hp, vp) -> Scenario:
     n_hosts = int(rng.integers(1, 4))

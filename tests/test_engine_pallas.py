@@ -6,6 +6,8 @@ import pytest
 
 from repro.core import SPACE_SHARED, TIME_SHARED, scenarios, simulate
 
+pytestmark = pytest.mark.tier1
+
 
 @pytest.mark.parametrize("hp,vp", [(SPACE_SHARED, SPACE_SHARED),
                                    (TIME_SHARED, TIME_SHARED)])

@@ -4,6 +4,10 @@ import numpy as np
 
 from repro.core import scenarios, simulate
 
+import pytest
+
+pytestmark = pytest.mark.tier1
+
 
 def test_table1_federation_claims():
     """Paper §5: federation cuts mean turnaround >50% (we land ~55%) and

@@ -5,6 +5,8 @@ import pytest
 
 from repro.core import SPACE_SHARED, TIME_SHARED, scenarios, simulate
 
+pytestmark = pytest.mark.tier1
+
 L = 400.0  # seconds per dedicated-core task (4000 MI / 10 MIPS)
 
 

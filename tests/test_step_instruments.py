@@ -20,6 +20,8 @@ from repro.core import (
 from repro.core.energy import PowerModel
 from repro.core.pytree import pytree_dataclass
 
+pytestmark = pytest.mark.tier1
+
 
 def _results_identical(res_a, res_b):
     for f in dataclasses.fields(res_a):

@@ -23,6 +23,8 @@ from repro.core import (
 )
 from repro.core.energy import PowerModel, Topology
 
+pytestmark = pytest.mark.tier1
+
 
 def _assert_results_identical(res_a, res_b):
     for f in dataclasses.fields(res_a):
