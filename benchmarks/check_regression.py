@@ -1,13 +1,18 @@
 """Bench-regression gate: fail CI when engine throughput drops vs baseline.
 
     PYTHONPATH=src python -m benchmarks.check_regression \
-        --baseline BENCH_baseline.json --fresh BENCH_engine.json
+        --baseline BENCH_baseline.json \
+        --fresh BENCH_engine.json BENCH_migration.json
 
-Compares the *jnp*-path throughput metrics of a fresh ``BENCH_engine.json``
-(benchmarks/engine_sweep.py) against the committed ``BENCH_baseline.json``:
+Merges the fresh reports (top-level sections are disjoint by construction:
+``benchmarks/engine_sweep.py`` and ``benchmarks/live_migration.py`` each own
+their sections) and compares the *jnp*-path throughput metrics against the
+committed ``BENCH_baseline.json``:
 
 * ``advance_sweep_kernel.jnp.cloudlets_per_s`` — raw fused-sweep throughput
 * ``engine_fig9_10.jnp.events_per_s``          — full-engine event rate
+* ``migration_sweep.jnp.scenarios_per_s``      — vmapped live-migration
+                                                 threshold-grid campaign
 
 Only the jnp path gates: the Pallas twin runs in interpret mode on CPU CI,
 so its wall time is a correctness seat, not a perf claim (DESIGN.md §4).
@@ -25,6 +30,7 @@ import sys
 GATED = (
     ("advance_sweep_kernel", "jnp", "cloudlets_per_s"),
     ("engine_fig9_10", "jnp", "events_per_s"),
+    ("migration_sweep", "jnp", "scenarios_per_s"),
 )
 
 
@@ -58,20 +64,28 @@ def check(baseline: dict, fresh: dict, tol: float) -> list[str]:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--baseline", default="BENCH_baseline.json")
-    ap.add_argument("--fresh", default="BENCH_engine.json")
+    ap.add_argument("--fresh", nargs="+",
+                    default=["BENCH_engine.json", "BENCH_migration.json"],
+                    help="fresh report(s); top-level sections are merged")
     ap.add_argument("--tol", type=float, default=0.5,
                     help="fail when fresh/baseline falls below this ratio")
     args = ap.parse_args(argv)
 
-    reports = {}
-    for name, path in (("baseline", args.baseline), ("fresh", args.fresh)):
+    reports = {"fresh": {}}
+    for name, path in [("baseline", args.baseline)] + [
+        ("fresh", p) for p in args.fresh
+    ]:
         try:
             with open(path) as f:
-                reports[name] = json.load(f)
+                data = json.load(f)
         except (OSError, json.JSONDecodeError) as e:
             print(f"error: cannot read {name} report {path!r}: {e}",
                   file=sys.stderr)
             return 2
+        if name == "fresh":
+            reports["fresh"].update(data)
+        else:
+            reports[name] = data
 
     try:
         failures = check(reports["baseline"], reports["fresh"], args.tol)

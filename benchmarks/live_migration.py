@@ -1,0 +1,110 @@
+"""Live VM migration across federated datacenters (DESIGN.md §8).
+
+Beyond-paper rows for the abstract's "federation and associated policies for
+migration of VMs" claim: the energy-consolidation demo (idle-gated power
+model, migration on vs off in the same compiled program) and a vmapped
+consolidate-threshold x balance-threshold campaign, reported as throughput —
+the jnp-path number ``migration_sweep.jnp.scenarios_per_s`` is gated by
+``benchmarks/check_regression.py`` against ``BENCH_baseline.json``.
+
+    PYTHONPATH=src python -m benchmarks.live_migration
+
+Writes ``BENCH_migration.json``.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    broadcast_campaign,
+    run_campaign,
+    scenarios,
+    simulate_instrumented,
+)
+
+OUT_PATH = "BENCH_migration.json"
+
+
+def bench_consolidation_demo() -> dict:
+    fn = jax.jit(simulate_instrumented)
+    rows = {}
+    for name, live in (("migrated", True), ("static", False)):
+        scn = scenarios.consolidation_scenario(live_migration=live)
+        res, out = fn(scn)
+        jax.block_until_ready(res)
+        rows[name] = {
+            "n_finished": int(res.n_finished),
+            "n_migrations": int(res.n_migrations),
+            "n_consolidate": int(out["migration"]["n_consolidate"]),
+            "energy_j": float(np.sum(np.array(res.energy_j))),
+            "end_t_s": float(res.end_t),
+        }
+    rows["energy_saving"] = 1.0 - (
+        rows["migrated"]["energy_j"] / rows["static"]["energy_j"]
+    )
+    return rows
+
+
+def bench_threshold_sweep(n_con: int = 8, n_bal: int = 4,
+                          n_rep: int = 3) -> dict:
+    """The campaign surface: K = n_con x n_bal thresholds in one vmap."""
+    k = n_con * n_bal
+    template = scenarios.consolidation_scenario()
+    cons = jnp.tile(jnp.linspace(0.0, 0.9, n_con), n_bal)
+    bals = jnp.repeat(jnp.linspace(0.5, 2.0, n_bal), n_con)
+    pol = jax.vmap(
+        lambda c, b: template.policy.replace(
+            migrate_consolidate_thresh=c, migrate_balance_thresh=b)
+    )(cons, bals)
+    batched = broadcast_campaign(template, k, policy=pol)
+
+    res = run_campaign(batched)                      # compile + warm
+    jax.block_until_ready(res)
+    t0 = time.perf_counter()
+    for _ in range(n_rep):
+        res = run_campaign(batched)
+        jax.block_until_ready(res)
+    wall = (time.perf_counter() - t0) / n_rep
+    n_mig = np.array(res.n_migrations)
+    return {
+        "jnp": {
+            "grid_points": k,
+            "wall_s": wall,
+            "scenarios_per_s": k / wall,
+        },
+        "all_finished": bool(
+            (np.array(res.n_finished)
+             == template.cloudlets.n_cloudlets).all()),
+        "n_migrations_min": int(n_mig.min()),
+        "n_migrations_max": int(n_mig.max()),
+    }
+
+
+def run() -> dict:
+    return {
+        "backend": jax.default_backend(),
+        "consolidation_demo": bench_consolidation_demo(),
+        "migration_sweep": bench_threshold_sweep(),
+    }
+
+
+def main() -> None:
+    report = run()
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {OUT_PATH}")
+    d = report["consolidation_demo"]
+    print(f"migration,consolidation,energy_saving={d['energy_saving']:.3f},"
+          f"moves={d['migrated']['n_migrations']}")
+    g = report["migration_sweep"]
+    print(f"migration,sweep,points={g['jnp']['grid_points']},"
+          f"scenarios_per_s={g['jnp']['scenarios_per_s']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

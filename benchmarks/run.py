@@ -32,6 +32,8 @@ SECTIONS = (
      "engine_sweep", "BENCH_engine.json"),
     ("Dynamic workloads + auto-scaling (-> BENCH_autoscale.json)",
      "autoscale_workload", "BENCH_autoscale.json"),
+    ("Live VM migration across federated DCs (-> BENCH_migration.json)",
+     "live_migration", "BENCH_migration.json"),
     ("Serving scheduler (beyond paper: CloudSim-driven batching)",
      "serving_sched", None),
     ("Energy + topology (the paper's future work, implemented)",

@@ -35,6 +35,7 @@ from repro.core.engine import (
 from repro.core.step import (
     AutoscaleInstrument,
     Instrument,
+    MigrationInstrument,
     StepEvent,
     TraceInstrument,
     UtilizationTimelineInstrument,
@@ -60,8 +61,8 @@ __all__ = [
     "INF", "SPACE_SHARED", "TIME_SHARED",
     "Cloudlets", "Hosts", "Market", "Policy", "Scenario",
     "SimResult", "SimState", "VMRequests", "finished_mask",
-    "AutoscaleInstrument", "History", "Instrument", "StepEvent",
-    "TraceInstrument", "UtilizationTimelineInstrument",
+    "AutoscaleInstrument", "History", "Instrument", "MigrationInstrument",
+    "StepEvent", "TraceInstrument", "UtilizationTimelineInstrument",
     "init_state", "event_step",
     "simulate", "simulate_history", "simulate_instrumented", "simulate_trace",
     "broadcast_campaign", "run_campaign", "run_campaign_sharded",

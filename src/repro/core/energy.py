@@ -25,16 +25,25 @@ from repro.core.pytree import pytree_dataclass
 
 @pytree_dataclass
 class PowerModel:
-    """Per-DC host power parameters, [D] each."""
+    """Per-DC host power parameters, [D] each.
+
+    ``gate_idle`` models per-host power gating: a host with *no* VM holding
+    resources on it draws zero instead of ``watts_idle`` — the accounting
+    that makes energy-consolidation migration (DESIGN.md §8) visible.  None
+    (or all-False) keeps the classic always-on datacenter model.
+    """
     watts_idle: Array    # drawn whenever a host is powered
     watts_peak: Array    # at 100% core-MIPS utilization
+    gate_idle: Array | None = None   # [D] bool: unoccupied hosts draw 0
 
     @staticmethod
-    def uniform(n_dc: int, idle: float = 93.0, peak: float = 135.0):
+    def uniform(n_dc: int, idle: float = 93.0, peak: float = 135.0,
+                gate_idle: bool = False):
         # defaults: SPECpower-ish numbers for a 2009-era 1U server
         return PowerModel(
             watts_idle=jnp.full((n_dc,), idle, jnp.float32),
             watts_peak=jnp.full((n_dc,), peak, jnp.float32),
+            gate_idle=jnp.full((n_dc,), gate_idle, bool),
         )
 
 
@@ -118,20 +127,43 @@ def dc_utilization(
     )
 
 
+def host_occupied(scn: Scenario, state: SimState) -> Array:
+    """[D, H] bool — at least one VM currently holds resources on the host.
+
+    A live-migrating VM occupies its *destination* slot from departure
+    (provision.live_migrate reserves it), matching the free-capacity ledger.
+    """
+    D, H = scn.hosts.cores.shape
+    occ = state.vm_placed & ~state.vm_released & scn.vms.exists
+    seg = jnp.where(occ, state.vm_dc * H + state.vm_host, D * H)
+    counts = jnp.zeros((D * H + 1,), jnp.int32).at[
+        jnp.clip(seg, 0, D * H)
+    ].add(occ.astype(jnp.int32))
+    return counts[:-1].reshape(D, H) > 0
+
+
 def power_draw(
     scn: Scenario, state: SimState, vm_mips: Array | None = None
 ) -> Array:
     """[D] instantaneous watts given the current allocation.
 
     Utilization per host = granted MIPS / capacity; idle power charged for
-    every existing host (no power-gating model — matches the paper's framing
-    of energy as an always-on datacenter cost).
+    every existing host — the paper's always-on datacenter framing — except
+    hosts that are unoccupied under a ``gate_idle`` power model, which draw
+    zero (the consolidation-migration payoff, DESIGN.md §8).
     """
     util = host_utilization(scn, state, vm_mips)
     pm: PowerModel = scn.power            # type: ignore[attr-defined]
+    idle = jnp.broadcast_to(
+        pm.watts_idle[:, None], scn.hosts.cores.shape
+    )
+    if getattr(pm, "gate_idle", None) is not None:
+        idle = jnp.where(
+            pm.gate_idle[:, None] & ~host_occupied(scn, state), 0.0, idle
+        )
     watts = jnp.where(
         scn.hosts.exists,
-        pm.watts_idle[:, None] + (pm.watts_peak - pm.watts_idle)[:, None] * util,
+        idle + (pm.watts_peak - pm.watts_idle)[:, None] * util,
         0.0,
     )
     return jnp.sum(watts, axis=1)

@@ -71,6 +71,7 @@ def init_state(scn: Scenario) -> SimState:
         vm_avail_t=jnp.full((V,), INF, f32),
         vm_released=jnp.zeros((V,), bool),
         vm_migrations=jnp.zeros((V,), i32),
+        vm_mig_src=jnp.full((V,), -1, i32),
         pool_active=jnp.zeros((V,), bool),
         free_ram=jnp.where(hosts.exists, hosts.ram_mb, 0.0),
         free_storage=jnp.where(hosts.exists, hosts.storage_mb, 0.0),

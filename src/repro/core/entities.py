@@ -12,6 +12,7 @@ Cloudlet         one row of ``Cloudlets`` + per-cloudlet state in ``SimState``
 DatacenterBroker the arrival schedule baked into ``request_t`` / ``submit_t``
 SANStorage       ``input_mb``/``output_mb`` transfer latency + bandwidth cost
 CloudCoordinator ``sensed_load`` + the federation placement rule (provision.py)
+                 + the runtime migration policies (step.MigrationInstrument)
 Sensor           the periodic ``sensed_load`` refresh (engine.py tick)
 CIS registry     implicit: placement searches the global ``[D, H]`` host table
 ===============  =============================================================
@@ -132,6 +133,14 @@ class Policy:
                               #             activates one pool VM per DC
     scale_down_thresh: Array  # scalar f32: DC utilization below this releases
                               #             one idle pool VM per DC (0 disables)
+    # --- runtime (live) migration, DESIGN.md §8 ---
+    live_migration: Array            # scalar bool: MigrationInstrument acts
+    migrate_balance_thresh: Array    # scalar f32: a DC whose demand exceeds
+                                     #   this may shed its busiest VM to the
+                                     #   least-loaded feasible peer
+    migrate_consolidate_thresh: Array  # scalar f32: a DC below this drains
+                                     #   its idlest VM toward the busiest
+                                     #   feasible peer (0 disables)
 
 
 @pytree_dataclass(static=("max_steps", "sweep_impl"))
@@ -173,6 +182,9 @@ class SimState:
     vm_avail_t: Array    # [V] f32 creation/migration completes at this time
     vm_released: Array   # [V] bool resources returned after all work done
     vm_migrations: Array # [V] i32
+    vm_mig_src: Array    # [V] i32 source DC of an in-flight *live* migration
+                         #         (-1 at rest / once arrived) — the fixed-shape
+                         #         pending-move marker, DESIGN.md §8
     pool_active: Array   # [V] bool pool row activated by the autoscaler
                          #          (inactive -> activating -> active -> released)
     # --- host free capacity (provisioner view) ---

@@ -56,9 +56,10 @@ def vm_done(scn: Scenario, state: SimState) -> Array:
     service burst with an empty fleet (service rows would never run).  The
     cost is deliberate: in mixed fixed+service scenarios, a drained
     fixed-binding VM holds its slot until the last service row dispatches.
-    And pool VMs are destroyed only by the autoscaler's scale-down (their
-    "done" is ``vm_released``), never by workload drain — an idle pool VM
-    holds its slot until utilization says otherwise.
+    And pool VMs are destroyed only by the autoscaler's scale-down
+    (``provision.release_pool_vms``, which returns the row to the inactive
+    pool state so it can be re-activated later), never by workload drain —
+    an idle pool VM holds its slot until utilization says otherwise.
     """
     V = scn.vms.n_vms
     assigned = state.cl_vm >= 0
@@ -71,6 +72,34 @@ def vm_done(scn: Scenario, state: SimState) -> Array:
     pending = jnp.any(scn.cloudlets.exists & ~assigned)
     done = has_work & all_fin & ~pending
     return jnp.where(scn.vms.pool, state.vm_released, done)
+
+
+def vm_outstanding_mi(scn: Scenario, state: SimState) -> Array:
+    """[V] assigned-but-unfinished remaining MI per VM.
+
+    The broker's dispatch load key and the migration policies' "how much work
+    rides on this VM" signal share this reduction.
+    """
+    V = scn.vms.n_vms
+    seg = jnp.where(scn.cloudlets.exists & (state.cl_vm >= 0), state.cl_vm, V)
+    return segments.segment_sum(
+        jnp.where(cloudlet_finished(state), 0.0, state.rem_mi), seg, V
+    )
+
+
+def vm_demand_mips(scn: Scenario, state: SimState) -> Array:
+    """[V] MIPS demanded right now: each ready, unfinished cloudlet wants
+    ``cores`` of its VM's per-core MIPS whether or not the host throttles it
+    (queued work counts fully — run-queue pressure, DESIGN.md §7/§8).
+    """
+    cls, vms = scn.cloudlets, scn.vms
+    V = vms.n_vms
+    want = cls.exists & cloudlet_ready(scn, state) & ~cloudlet_finished(state)
+    seg = jnp.where(want & (state.cl_vm >= 0), state.cl_vm, V)
+    cores = segments.segment_sum(
+        jnp.where(want, cls.cores.astype(jnp.float32), 0.0), seg, V
+    )
+    return cores * vms.mips
 
 
 def host_level_mips(scn: Scenario, state: SimState) -> Array:

@@ -27,7 +27,12 @@ from repro.core import policies, segments
 
 
 def _return_resources(scn: Scenario, state: SimState, newly: Array) -> SimState:
-    """Give the host resources of ``newly``-released VM rows back."""
+    """Give the host resources of ``newly``-masked VM rows back.
+
+    Pure resource accounting: callers decide what the release *means*
+    (terminal ``vm_released`` for drained VMs, back-to-inactive for pool
+    rows, a slot handoff for live migration).
+    """
     d = jnp.clip(state.vm_dc, 0, scn.hosts.n_dc - 1)
     h = jnp.clip(state.vm_host, 0, scn.hosts.n_hosts - 1)
     w = newly.astype(jnp.float32)
@@ -36,31 +41,71 @@ def _return_resources(scn: Scenario, state: SimState, newly: Array) -> SimState:
         free_storage=state.free_storage.at[d, h].add(w * scn.vms.storage_mb),
         free_bw=state.free_bw.at[d, h].add(w * scn.vms.bw_mbps),
         free_cores=state.free_cores.at[d, h].add(w * scn.vms.cores),
-        vm_released=state.vm_released | newly,
     )
 
 
 def release_done_vms(scn: Scenario, state: SimState) -> SimState:
     """Return resources of VMs whose entire workload finished (auto-destroy).
 
-    Pool VMs are exempt: ``vm_done`` reports them done only once released, so
-    the autoscaler's scale-down (``release_pool_vms``) is the sole destroyer.
+    Pool VMs are exempt: ``vm_done`` never reports them done, so the
+    autoscaler's scale-down (``release_pool_vms``) is their sole destroyer.
     """
     done = policies.vm_done(scn, state)
     newly = done & state.vm_placed & ~state.vm_released
-    return _return_resources(scn, state, newly)
+    state = _return_resources(scn, state, newly)
+    return state.replace(vm_released=state.vm_released | newly)
 
 
 def release_pool_vms(scn: Scenario, state: SimState, rel: Array) -> SimState:
     """Scale-down commit: release the ``rel``-masked pool VMs.
 
-    Terminal per the pool lifecycle (inactive -> activating -> active ->
-    released, DESIGN.md §7): the row stays ``vm_placed`` so the provisioner
-    never re-creates it — fixed shapes, no row recycling.
+    The row returns to the *inactive* pool state (lifecycle inactive ->
+    activating -> active -> inactive, DESIGN.md §7): host resources come
+    back, placement is cleared, and the row is eligible for a later
+    scale-up, which re-places it from its origin DC with the usual boot
+    latency — the fixed-shape row is recycled, never re-allocated.
     """
     newly = rel & state.vm_placed & ~state.vm_released
     state = _return_resources(scn, state, newly)
-    return state.replace(pool_active=state.pool_active & ~newly)
+    return state.replace(
+        pool_active=state.pool_active & ~newly,
+        vm_placed=state.vm_placed & ~newly,
+        vm_host=jnp.where(newly, -1, state.vm_host),
+        vm_dc=jnp.where(newly, scn.vms.dc, state.vm_dc),
+        vm_avail_t=jnp.where(newly, INF, state.vm_avail_t),
+        vm_mig_src=jnp.where(newly, -1, state.vm_mig_src),
+    )
+
+
+def resource_feasible(scn: Scenario, state: SimState, v: Array) -> Array:
+    """[D, H] hosts meeting RAM/storage/bandwidth for VM row ``v`` (no core
+    check — that is the slot-vs-stack distinction, see ``slot_feasible``)."""
+    hosts, vms = scn.hosts, scn.vms
+    return (
+        hosts.exists
+        & (state.free_ram >= vms.ram_mb[v])
+        & (state.free_storage >= vms.storage_mb[v])
+        & (state.free_bw >= vms.bw_mbps[v])
+    )
+
+
+def slot_feasible(scn: Scenario, state: SimState, v: Array) -> Array:
+    """[D, H] free VM slots (resources + unreserved cores) for row ``v``."""
+    return resource_feasible(scn, state, v) & (
+        state.free_cores >= scn.vms.cores[v]
+    )
+
+
+def dc_capacity_mips(scn: Scenario) -> Array:
+    """[D] total core-MIPS capacity of each datacenter's existing hosts."""
+    return jnp.sum(
+        jnp.where(
+            scn.hosts.exists,
+            scn.hosts.cores.astype(jnp.float32) * scn.hosts.mips,
+            0.0,
+        ),
+        axis=1,
+    )
 
 
 def provision_due_vms(scn: Scenario, state: SimState) -> tuple[SimState, Array]:
@@ -85,12 +130,7 @@ def provision_due_vms(scn: Scenario, state: SimState) -> tuple[SimState, Array]:
             & ~st.vm_failed[v]
             & vms.exists[v]
         )
-        feasible = (
-            hosts.exists
-            & (st.free_ram >= vms.ram_mb[v])
-            & (st.free_storage >= vms.storage_mb[v])
-            & (st.free_bw >= vms.bw_mbps[v])
-        )
+        feasible = resource_feasible(scn, st, v)
         # Phase 1 — free VM slot (unreserved cores). Phase 2 — stack onto an
         # already-busy host (time-sharing it); forbidden when the provisioner
         # is core-reserving, and never used for migration: the paper's rule
@@ -203,6 +243,80 @@ def provision_due_vms(scn: Scenario, state: SimState) -> tuple[SimState, Array]:
     return state, jnp.sum(placed.astype(jnp.int32))
 
 
+def live_migrate(
+    scn: Scenario, state: SimState, v: Array, dst_dc: Array, ok: Array
+) -> tuple[SimState, Array]:
+    """Commit one runtime VM move decided by the CloudCoordinator policies
+    (step.MigrationInstrument, DESIGN.md §8).
+
+    Stop-and-copy semantics, ordered within one event: the *source* slot is
+    released first (a due creation in the same step may take it), then a slot
+    at ``dst_dc`` is occupied immediately (first-fit, or best-fit under
+    ``Policy.best_fit``) so the arrival can never fail, and the VM becomes
+    unavailable until ``t + migration_fixed_s + image/bw`` through the
+    existing ``vm_avail_t`` / ``K_MIGRATION`` machinery.  In-flight cloudlets
+    keep their accrued ``rem_mi`` — rates simply gate to zero while the image
+    is in transit.  The image transfer is billed on the destination's
+    bandwidth meter, exactly like a creation-time federation migration.
+
+    ``v``/``dst_dc`` are traced scalars; ``ok`` gates the whole commit, so a
+    disabled policy is a no-op inside the same compiled program.  Returns
+    ``(state', moved)``.
+    """
+    hosts, vms, pol = scn.hosts, scn.vms, scn.policy
+    D, H = hosts.cores.shape
+    V = vms.n_vms
+
+    fits = slot_feasible(scn, state, v)[dst_dc]                   # [H]
+    host_key = jnp.where(
+        pol.best_fit,
+        state.free_ram[dst_dc] - vms.ram_mb[v],
+        jnp.arange(H, dtype=jnp.float32),
+    )
+    h = jnp.argmin(jnp.where(fits, host_key, jnp.inf))
+    found = ok & jnp.any(fits)
+
+    src_d = jnp.clip(state.vm_dc[v], 0, D - 1)
+    # source releases first: the departing VM's slot is free for this step's
+    # creations (and, degenerately, for its own re-placement — the policies
+    # exclude dst == src, so the ordering is only ever release -> occupy)
+    state = _return_resources(scn, state, (jnp.arange(V) == v) & found)
+
+    w = found.astype(jnp.float32)
+    dsafe = jnp.where(found, dst_dc, 0)
+    hsafe = jnp.where(found, h, 0)
+    if scn.topology is not None:
+        delay = (
+            pol.migration_fixed_s
+            + scn.topology.latency_s[src_d, dsafe]
+            + vms.image_mb[v] / jnp.maximum(
+                scn.topology.bw_mbps[src_d, dsafe], 1e-6)
+        )
+    else:
+        delay = pol.migration_fixed_s + vms.image_mb[v] / jnp.maximum(
+            pol.interdc_bw_mbps, 1e-6
+        )
+    state = state.replace(
+        vm_dc=state.vm_dc.at[v].set(
+            jnp.where(found, dst_dc, state.vm_dc[v])),
+        vm_host=state.vm_host.at[v].set(
+            jnp.where(found, h, state.vm_host[v])),
+        vm_avail_t=state.vm_avail_t.at[v].set(
+            jnp.where(found, state.t + delay, state.vm_avail_t[v])),
+        vm_migrations=state.vm_migrations.at[v].add(found.astype(jnp.int32)),
+        vm_mig_src=state.vm_mig_src.at[v].set(
+            jnp.where(found, src_d, state.vm_mig_src[v])),
+        free_ram=state.free_ram.at[dsafe, hsafe].add(-w * vms.ram_mb[v]),
+        free_storage=state.free_storage.at[dsafe, hsafe].add(
+            -w * vms.storage_mb[v]),
+        free_bw=state.free_bw.at[dsafe, hsafe].add(-w * vms.bw_mbps[v]),
+        free_cores=state.free_cores.at[dsafe, hsafe].add(-w * vms.cores[v]),
+        bw_cost=state.bw_cost.at[dsafe].add(
+            w * vms.image_mb[v] * scn.market.cost_per_bw_mb[dsafe]),
+    )
+    return state, found
+
+
 def eligible_dispatch_vms(scn: Scenario, state: SimState) -> Array:
     """[V] bool — VMs the broker may route service cloudlets to.
 
@@ -235,10 +349,7 @@ def dispatch_cloudlets(scn: Scenario, state: SimState) -> SimState:
     eligible = eligible_dispatch_vms(scn, state)
     n_elig = jnp.sum(eligible.astype(jnp.int32))
 
-    seg = jnp.where(cls.exists & (state.cl_vm >= 0), state.cl_vm, V)
-    outstanding = segments.segment_sum(
-        jnp.where(policies.cloudlet_finished(state), 0.0, state.rem_mi), seg, V
-    )
+    outstanding = policies.vm_outstanding_mi(scn, state)
     cap = jnp.maximum(vms.cores.astype(jnp.float32) * vms.mips, 1e-9)
     load_key = jnp.where(eligible, outstanding / cap, INF)
     vm_order = jnp.argsort(load_key)                     # least-loaded first
@@ -265,29 +376,11 @@ def demand_load(scn: Scenario, state: SimState) -> Array:
     so queued work pushes the reading above 1 — run-queue pressure, exactly
     what threshold scaling should react to (DESIGN.md §7).
     """
-    cls, vms = scn.cloudlets, scn.vms
     D = scn.hosts.n_dc
-    V = vms.n_vms
-    vmi = jnp.clip(state.cl_vm, 0, V - 1)
-    want = (
-        cls.exists
-        & policies.cloudlet_ready(scn, state)
-        & ~policies.cloudlet_finished(state)
-    )
-    mips_want = cls.cores.astype(jnp.float32) * vms.mips[vmi]
-    dc = jnp.clip(state.vm_dc[vmi], 0, D - 1)
-    demand = jnp.zeros((D,), jnp.float32).at[dc].add(
-        jnp.where(want, mips_want, 0.0)
-    )
-    cap = jnp.sum(
-        jnp.where(
-            scn.hosts.exists,
-            scn.hosts.cores.astype(jnp.float32) * scn.hosts.mips,
-            0.0,
-        ),
-        axis=1,
-    )
-    return demand / jnp.maximum(cap, 1e-9)
+    vm_demand = policies.vm_demand_mips(scn, state)               # [V]
+    dc = jnp.clip(state.vm_dc, 0, D - 1)
+    demand = jnp.zeros((D,), jnp.float32).at[dc].add(vm_demand)
+    return demand / jnp.maximum(dc_capacity_mips(scn), 1e-9)
 
 
 def sense_load(scn: Scenario, state: SimState) -> Array:

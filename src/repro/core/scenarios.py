@@ -10,6 +10,9 @@
   fixed fleet — Poisson / diurnal / bursty arrival processes.
 * ``autoscale_scenario``: bursty service-routed workload + a spare-VM pool
   driven by the threshold autoscaler (DESIGN.md §7).
+* ``consolidation_scenario`` / ``balance_scenario``: runtime (live) VM
+  migration across federated DCs — energy consolidation under an idle-gated
+  power model, and load balancing with progress preservation (DESIGN.md §8).
 
 All static-workload builders produce numpy-backed pytrees; nothing touches
 devices until the engine is jitted, so a 100k-host scenario costs megabytes
@@ -49,6 +52,9 @@ def make_policy(
     autoscale: bool = False,
     scale_up_thresh: float = 0.75,
     scale_down_thresh: float = 0.0,
+    live_migration: bool = False,
+    migrate_balance_thresh: float = 1e9,
+    migrate_consolidate_thresh: float = 0.0,
 ) -> Policy:
     return Policy(
         host_policy=jnp.asarray(host_policy, jnp.int32),
@@ -63,6 +69,11 @@ def make_policy(
         autoscale=jnp.asarray(autoscale, bool),
         scale_up_thresh=jnp.asarray(scale_up_thresh, jnp.float32),
         scale_down_thresh=jnp.asarray(scale_down_thresh, jnp.float32),
+        live_migration=jnp.asarray(live_migration, bool),
+        migrate_balance_thresh=jnp.asarray(
+            migrate_balance_thresh, jnp.float32),
+        migrate_consolidate_thresh=jnp.asarray(
+            migrate_consolidate_thresh, jnp.float32),
     )
 
 
@@ -209,7 +220,10 @@ def fig9_10_scenario(vm_policy: int, n_hosts: int = 10_000, n_vms: int = 50,
 def table1_scenario(federation: bool, n_dc: int = 3, hosts_per_dc: int = 10,
                     dc0_hosts: int = 7, n_vms: int = 25,
                     cloudlet_mi: float = 1_800_000.0,
-                    peer_background: int = 5) -> Scenario:
+                    peer_background: int = 5,
+                    live_migration: bool = False,
+                    migrate_balance_thresh: float = 1e9,
+                    migrate_consolidate_thresh: float = 0.0) -> Scenario:
     """Federated 3-DC experiment (paper §5, Table 1).
 
     The paper's text under-specifies the saturation mechanism (its stated 50
@@ -224,6 +238,10 @@ def table1_scenario(federation: bool, n_dc: int = 3, hosts_per_dc: int = 10,
     (1024/256 MB) -> 7200 s tasks; with federation the overflow spreads over
     peer slots and lightly-stacked origin hosts.  See
     benchmarks/table1_federation.py for the measured table.
+
+    ``live_migration=True`` additionally attaches the runtime
+    ``MigrationInstrument`` with the given thresholds (DESIGN.md §8) — off by
+    default, so the published Table-1 numbers are untouched.
     """
     exists = np.ones((n_dc, hosts_per_dc), bool)
     exists[0, dc0_hosts:] = False
@@ -254,10 +272,21 @@ def table1_scenario(federation: bool, n_dc: int = 3, hosts_per_dc: int = 10,
         migration_fixed_s=30.0,
         interdc_bw_mbps=100.0,
         horizon=50_000.0,
+        live_migration=live_migration,
+        migrate_balance_thresh=migrate_balance_thresh,
+        migrate_consolidate_thresh=migrate_consolidate_thresh,
     )
+    instruments = ()
+    max_steps = 4 * (total_vms + n_vms) + 1200
+    if live_migration:
+        from repro.core.step import MigrationInstrument
+
+        instruments = (MigrationInstrument(),)
+        max_steps += 400   # migration arrivals on top of the tick budget
     return Scenario(hosts=hosts, vms=vms, cloudlets=cls,
                     market=uniform_market(n_dc),
-                    policy=pol, max_steps=4 * (total_vms + n_vms) + 1200)
+                    policy=pol, instruments=instruments,
+                    max_steps=max_steps)
 
 
 # ---------------------------------------------------------------------------
@@ -337,4 +366,106 @@ def autoscale_scenario(key, *, n_base: int = 4, n_pool: int = 4,
     return Scenario(hosts=hosts, vms=vms, cloudlets=cls,
                     market=uniform_market(1), policy=pol,
                     instruments=(AutoscaleInstrument(),),
+                    max_steps=max_steps)
+
+
+# ---------------------------------------------------------------------------
+# Runtime (live) migration scenarios (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def consolidation_scenario(*, n_spare: int = 4, n_tasks: int = 4,
+                           task_mi: float = 500_000.0,
+                           live_migration: bool = True,
+                           consolidate_thresh: float = 0.5,
+                           sensor_interval: float = 30.0,
+                           migration_fixed_s: float = 30.0,
+                           interdc_bw_mbps: float = 100.0,
+                           horizon: float = 4000.0,
+                           idle_w: float = 93.0,
+                           peak_w: float = 135.0) -> Scenario:
+    """Energy-consolidation demo: two federated DCs under an idle-gated power
+    model (energy.PowerModel.gate_idle).
+
+    DC0 runs the actual work — one big host (``1 + n_spare`` cores) hosting a
+    single worker VM with ``n_tasks`` serial cloudlets.  DC1 holds
+    ``n_spare`` *idle* VMs, one per single-core host, burning idle watts.
+    With live migration on, the coordinator drains DC1's idle images into
+    DC0's spare slots (one per sensor tick, idlest VM first), the emptied
+    hosts power-gate to zero, and total energy drops measurably vs the
+    no-migration control — which is the *same compiled program*, because
+    ``Policy.live_migration`` is traced data a campaign can sweep.
+    """
+    from repro.core.energy import PowerModel
+    from repro.core.step import MigrationInstrument
+
+    D, H = 2, max(1, n_spare)
+    exists = np.zeros((D, H), bool)
+    exists[0, 0] = True
+    exists[1, :n_spare] = True
+    cores = np.ones((D, H), _I)
+    cores[0, 0] = 1 + n_spare
+    hosts = uniform_hosts(D, H, cores=1, mips=1000.0, ram_mb=8192.0,
+                          storage_mb=2_000_000.0, exists=exists)
+    hosts = hosts.replace(cores=jnp.asarray(cores))
+    # row 0: the worker at DC0; rows 1..n_spare: idle images at DC1
+    vms = uniform_vms(1 + n_spare, dc=np.array([0] + [1] * n_spare),
+                      cores=1, mips=1000.0, ram_mb=256.0, storage_mb=1024.0,
+                      image_mb=1024.0)
+    cls = make_cloudlets(np.zeros(n_tasks, _I), np.full(n_tasks, task_mi),
+                         np.zeros(n_tasks), input_mb=0.0, output_mb=0.0)
+    pol = make_policy(
+        host_policy=SPACE_SHARED, vm_policy=SPACE_SHARED,
+        federation=True, sensor_interval=sensor_interval,
+        migration_fixed_s=migration_fixed_s,
+        interdc_bw_mbps=interdc_bw_mbps, horizon=horizon,
+        live_migration=live_migration,
+        migrate_consolidate_thresh=consolidate_thresh)
+    max_steps = (4 * (n_tasks + 1 + n_spare)
+                 + 2 * int(horizon / sensor_interval) + 100)
+    return Scenario(hosts=hosts, vms=vms, cloudlets=cls,
+                    market=uniform_market(D), policy=pol,
+                    power=PowerModel.uniform(D, idle=idle_w, peak=peak_w,
+                                             gate_idle=True),
+                    instruments=(MigrationInstrument(),),
+                    max_steps=max_steps)
+
+
+def balance_scenario(*, live_migration: bool = True,
+                     balance_thresh: float = 1.5,
+                     work_mi: float = 1_000_000.0,
+                     bg_mi: float = 50_000.0,
+                     sensor_interval: float = 100.0,
+                     migration_fixed_s: float = 30.0,
+                     interdc_bw_mbps: float = 100.0,
+                     horizon: float = 10_000.0) -> Scenario:
+    """Load-balancing demo: two single-host DCs; DC0 starts 2x oversubscribed.
+
+    Two worker VMs time-share DC0's one core (500 MIPS each); DC1's host is
+    held by a short-lived background VM that drains early.  At the first
+    sensor tick after the slot frees, the coordinator sheds one worker —
+    carrying its accrued progress — to DC1, and both cloudlets finish in
+    roughly half the static control's makespan.  The improvement rule
+    (DESIGN.md §8) then holds the 1.0/1.0 split stable: no ping-pong.
+    """
+    from repro.core.step import MigrationInstrument
+
+    hosts = uniform_hosts(2, 1, cores=1, mips=1000.0, ram_mb=4096.0,
+                          storage_mb=2_000_000.0)
+    # row 0: background at DC1; rows 1-2: the oversubscribed workers at DC0
+    vms = uniform_vms(3, dc=np.array([1, 0, 0]), cores=1, mips=1000.0,
+                      ram_mb=256.0, storage_mb=1024.0, image_mb=1024.0)
+    cls = make_cloudlets(np.array([0, 1, 2]),
+                         np.array([bg_mi, work_mi, work_mi]),
+                         np.zeros(3), input_mb=0.0, output_mb=0.0)
+    pol = make_policy(
+        host_policy=TIME_SHARED, vm_policy=SPACE_SHARED,
+        federation=True, sensor_interval=sensor_interval,
+        migration_fixed_s=migration_fixed_s,
+        interdc_bw_mbps=interdc_bw_mbps, horizon=horizon,
+        live_migration=live_migration,
+        migrate_balance_thresh=balance_thresh)
+    max_steps = 4 * (3 + 3) + 2 * int(horizon / sensor_interval) + 100
+    return Scenario(hosts=hosts, vms=vms, cloudlets=cls,
+                    market=uniform_market(2), policy=pol,
+                    instruments=(MigrationInstrument(),),
                     max_steps=max_steps)

@@ -346,6 +346,130 @@ class AutoscaleInstrument(Instrument):
 
 
 @pytree_dataclass
+class MigrationInstrument(Instrument):
+    """Runtime (live) VM migration across federated datacenters — the
+    CloudCoordinator policy layer the paper's abstract promises beyond the
+    creation-time Table-1 rule (DESIGN.md §8).
+
+    At every federation sensor tick (a ``K_TICK`` clock stop, so the loop
+    never jumps across an evaluation) the coordinator reads per-DC *demand*
+    utilization (``provision.demand_load``) and commits at most ONE move:
+
+    * **load balancing** (loaded -> spare) — the most-loaded DC above
+      ``migrate_balance_thresh`` sheds its VM with the most outstanding work
+      to the least-loaded feasible peer, but only when the move strictly
+      shrinks the pair's utilization spread — the improvement rule that
+      makes ping-pong impossible.
+    * **energy consolidation** (spare -> loaded) — the least-loaded DC below
+      ``migrate_consolidate_thresh`` drains its VM with the *least*
+      outstanding work (idle images first) toward the busiest strictly-busier
+      feasible peer, emptying hosts for idle power-gating (energy.py).
+
+    Balance outranks consolidation within a tick.  The commit itself is
+    ``provision.live_migrate``: source slot released, destination slot
+    occupied in the same event, transfer billed on the inter-DC bandwidth
+    meter, and the VM unavailable for ``migration_fixed_s + image/bw`` via
+    the existing ``vm_avail_t`` / ``K_MIGRATION`` machinery — in-flight
+    cloudlets keep their accrued progress.
+
+    Everything is traced (``Policy.federation & Policy.live_migration`` gate
+    it all), so a migration run and its static control share one compiled
+    program and campaigns vmap over threshold grids.  Attach the instrument
+    statically; sweep the flags/thresholds as data.  The tick count depends
+    on the traced horizon, so scenarios attaching this must set
+    ``Scenario.max_steps`` explicitly, like the federation builders do.
+    """
+
+    name = "migration"
+    bound_kind = K_TICK
+
+    def init(self, scn: Scenario):
+        return (
+            jnp.asarray(0.0, jnp.float32),   # last evaluation time
+            jnp.asarray(0, jnp.int32),       # balance moves committed
+            jnp.asarray(0, jnp.int32),       # consolidation moves committed
+        )
+
+    def pre(self, scn: Scenario, st: SimState, aux):
+        last_t, n_bal, n_con = aux
+        pol, vms = scn.policy, scn.vms
+        V, D = vms.n_vms, scn.hosts.n_dc
+        enabled = pol.federation & pol.live_migration
+        due = enabled & (st.t >= last_t + pol.sensor_interval)
+
+        # arrivals: clear the in-flight pending-move marker
+        st = st.replace(vm_mig_src=jnp.where(
+            (st.vm_mig_src >= 0) & (st.vm_avail_t <= st.t),
+            -1, st.vm_mig_src))
+
+        util = provision.demand_load(scn, st)                      # [D]
+        cap = jnp.maximum(provision.dc_capacity_mips(scn), 1e-9)   # [D]
+        outstanding = policies.vm_outstanding_mi(scn, st)          # [V]
+        demand = policies.vm_demand_mips(scn, st)                  # [V]
+        movable = (
+            vms.exists & st.vm_placed & ~st.vm_failed & ~st.vm_released
+            & (st.vm_avail_t <= st.t)
+        )
+        dc_of = jnp.clip(st.vm_dc, 0, D - 1)
+        has_movable = jnp.zeros((D,), jnp.float32).at[dc_of].add(
+            movable.astype(jnp.float32)) > 0
+        dcs = jnp.arange(D)
+
+        # --- load balancing: loaded source sheds its busiest VM ---
+        src_ok_b = has_movable & (util > pol.migrate_balance_thresh)
+        src_b = jnp.argmax(jnp.where(src_ok_b, util, -jnp.inf))
+        v_b = jnp.argmax(jnp.where(
+            movable & (dc_of == src_b), outstanding, -jnp.inf))
+        dst_ok_b = (
+            jnp.any(provision.slot_feasible(scn, st, v_b), axis=1)
+            & (dcs != src_b)
+        )
+        dst_b = jnp.argmin(jnp.where(dst_ok_b, util, jnp.inf))
+        # improvement rule: the move must strictly shrink the pair's spread
+        spread_after = jnp.maximum(
+            util[src_b] - demand[v_b] / cap[src_b],
+            util[dst_b] + demand[v_b] / cap[dst_b],
+        )
+        bal_ok = (
+            due & jnp.any(src_ok_b) & jnp.any(dst_ok_b)
+            & (spread_after < util[src_b] - 1e-6)
+        )
+
+        # --- consolidation: idle source drains toward a busier peer ---
+        src_ok_c = has_movable & (util < pol.migrate_consolidate_thresh)
+        src_c = jnp.argmin(jnp.where(src_ok_c, util, jnp.inf))
+        v_c = jnp.argmin(jnp.where(
+            movable & (dc_of == src_c), outstanding, jnp.inf))
+        dst_ok_c = (
+            jnp.any(provision.slot_feasible(scn, st, v_c), axis=1)
+            & (dcs != src_c)
+            & (util > util[src_c] + 1e-6)   # strictly busier: terminates
+        )
+        dst_c = jnp.argmax(jnp.where(dst_ok_c, util, -jnp.inf))
+        con_ok = due & jnp.any(src_ok_c) & jnp.any(dst_ok_c) & ~bal_ok
+
+        v = jnp.where(bal_ok, v_b, v_c)
+        dst = jnp.where(bal_ok, dst_b, dst_c)
+        st, moved = provision.live_migrate(scn, st, v, dst, bal_ok | con_ok)
+        aux = (
+            jnp.where(due, st.t, last_t),
+            n_bal + (moved & bal_ok).astype(jnp.int32),
+            n_con + (moved & con_ok).astype(jnp.int32),
+        )
+        return st, aux
+
+    def bound(self, scn: Scenario, st: SimState, aux) -> Array:
+        pol = scn.policy
+        return jnp.where(
+            pol.federation & pol.live_migration,
+            aux[0] + pol.sensor_interval, INF,
+        )
+
+    def finalize(self, scn: Scenario, st: SimState, aux) -> dict:
+        return {"n_balance": aux[1], "n_consolidate": aux[2]}
+
+
+@pytree_dataclass
 class TraceInstrument(Instrument):
     """Per-cloudlet progress fractions at ``sample_ts`` — a pure observer.
 

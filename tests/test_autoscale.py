@@ -77,6 +77,21 @@ def test_scale_down_releases_idle_pool():
     assert int(res.n_finished) == scn.cloudlets.n_cloudlets
 
 
+def test_pool_row_reactivates_across_bursts():
+    """Pool rows are re-activatable (ROADMAP follow-up): with a single pool
+    row and a scale-down threshold over a bursty trace, the same row must
+    activate -> release -> re-activate (n_scale_up >= 2 with n_pool=1 can
+    only mean the one row cycled the lifecycle), finishing all work."""
+    scn = scenarios.autoscale_scenario(
+        jax.random.PRNGKey(0), n_pool=1, scale_down_thresh=0.05)
+    res, out = jax.jit(simulate_instrumented)(scn)
+    assert int(out["autoscale"]["n_scale_up"]) >= 2
+    assert int(out["autoscale"]["n_scale_down"]) >= 1
+    assert int(res.n_finished) == scn.cloudlets.n_cloudlets
+    # the recycled row ends the run placed again (its final activation)
+    assert np.array(res.vm_placed).sum() == 5
+
+
 def test_pool_invisible_without_autoscale():
     """A scenario whose pool is never activated is bit-identical to one with
     no pool rows at all: spare rows are dead weight, not a perturbation."""

@@ -72,6 +72,25 @@ def test_trace_matches_simulate_federated_with_energy():
     assert (np.diff(np.array(prog), axis=0) >= -1e-5).all()
 
 
+def test_trace_matches_simulate_live_migration():
+    """Live migration (MigrationInstrument attached, DESIGN.md §8): the
+    traced and history drivers stay bit-identical to ``simulate`` — cost,
+    energy, per-VM ``vm_dc`` and ``n_migrations`` included — while VMs
+    actually move at runtime."""
+    from repro.core import simulate_history
+
+    scn = scenarios.consolidation_scenario()
+    res = jax.jit(simulate)(scn)
+    assert int(res.n_migrations) == 4, "live moves must actually happen"
+    ts = jnp.asarray(np.arange(0.0, 2500.0, 111.0, dtype=np.float32))
+    res_t, prog = simulate_trace(scn, ts)
+    _assert_results_identical(res, res_t)
+    assert float(np.sum(np.array(res_t.energy_j))) > 0
+    assert (np.diff(np.array(prog), axis=0) >= -1e-5).all()
+    res_h, hist = jax.jit(simulate_history)(scn)
+    _assert_results_identical(res, res_h)
+
+
 def test_trace_matches_simulate_randomized():
     """Property over random workloads: traced SimResult == untraced, all
     fields, across seeds x policy combos (no hypothesis dependency)."""
