@@ -2,17 +2,20 @@
 
     PYTHONPATH=src python -m benchmarks.check_regression \
         --baseline BENCH_baseline.json \
-        --fresh BENCH_engine.json BENCH_migration.json
+        --fresh BENCH_engine.json BENCH_migration.json BENCH_reliability.json
 
 Merges the fresh reports (top-level sections are disjoint by construction:
-``benchmarks/engine_sweep.py`` and ``benchmarks/live_migration.py`` each own
-their sections) and compares the *jnp*-path throughput metrics against the
-committed ``BENCH_baseline.json``:
+``benchmarks/engine_sweep.py``, ``benchmarks/live_migration.py`` and
+``benchmarks/reliability.py`` each own their sections) and compares the
+*jnp*-path throughput metrics against the committed ``BENCH_baseline.json``:
 
 * ``advance_sweep_kernel.jnp.cloudlets_per_s`` — raw fused-sweep throughput
 * ``engine_fig9_10.jnp.events_per_s``          — full-engine event rate
 * ``migration_sweep.jnp.scenarios_per_s``      — vmapped live-migration
                                                  threshold-grid campaign
+* ``reliability_sweep.jnp.scenarios_per_s``    — vmapped host-failure MTBF x
+                                                 policy campaign (the
+                                                 revocation/failure path)
 
 Only the jnp path gates: the Pallas twin runs in interpret mode on CPU CI,
 so its wall time is a correctness seat, not a perf claim (DESIGN.md §4).
@@ -31,6 +34,7 @@ GATED = (
     ("advance_sweep_kernel", "jnp", "cloudlets_per_s"),
     ("engine_fig9_10", "jnp", "events_per_s"),
     ("migration_sweep", "jnp", "scenarios_per_s"),
+    ("reliability_sweep", "jnp", "scenarios_per_s"),
 )
 
 
@@ -65,7 +69,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--baseline", default="BENCH_baseline.json")
     ap.add_argument("--fresh", nargs="+",
-                    default=["BENCH_engine.json", "BENCH_migration.json"],
+                    default=["BENCH_engine.json", "BENCH_migration.json",
+                             "BENCH_reliability.json"],
                     help="fresh report(s); top-level sections are merged")
     ap.add_argument("--tol", type=float, default=0.5,
                     help="fail when fresh/baseline falls below this ratio")

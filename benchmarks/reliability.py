@@ -1,0 +1,161 @@
+"""Host failures + SLA-driven reliability (DESIGN.md §9).
+
+Beyond-paper rows for the abstract's "policies for migration of VMs *for
+reliability*" claim: the deterministic evacuation demo — proactive
+pre-failure drain vs restart-from-zero, same compiled program — and a
+vmapped MTBF x (evacuation, ckpt-interval) campaign over seeded outage
+schedules, reported as throughput.  The jnp-path number
+``reliability_sweep.jnp.scenarios_per_s`` is gated by
+``benchmarks/check_regression.py`` against ``BENCH_baseline.json``.
+
+    PYTHONPATH=src python -m benchmarks.reliability
+
+Writes ``BENCH_reliability.json``.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    INF,
+    broadcast_campaign,
+    run_campaign,
+    scenarios,
+    simulate,
+    workload,
+)
+
+OUT_PATH = "BENCH_reliability.json"
+
+
+def bench_evacuation_demo() -> dict:
+    """Evacuate-ahead-of-failure vs restart-from-zero (the acceptance demo):
+    fewer SLA violations and less downtime at the same energy order of
+    magnitude, in one compiled program (the policy knobs are traced)."""
+    fn = jax.jit(simulate)
+    rows = {}
+    for name, kw in (
+        ("evacuated", dict(evacuation=True, ckpt_interval=100_000.0)),
+        ("restart", dict(evacuation=False, ckpt_interval=float(INF))),
+    ):
+        res = fn(scenarios.evacuation_scenario(**kw))
+        jax.block_until_ready(res)
+        rows[name] = {
+            "n_finished": int(res.n_finished),
+            "sla_violations": int(res.sla_violations),
+            "downtime_s": float(res.downtime),
+            "n_evacuations": int(res.n_evacuations),
+            "makespan_s": float(res.makespan),
+            "energy_j": float(np.sum(np.array(res.energy_j))),
+        }
+    rows["evac_beats_restart"] = bool(
+        rows["evacuated"]["sla_violations"] < rows["restart"]["sla_violations"]
+        and rows["evacuated"]["downtime_s"] < rows["restart"]["downtime_s"]
+    )
+    rows["energy_ratio"] = (
+        rows["evacuated"]["energy_j"] / max(rows["restart"]["energy_j"], 1e-9)
+    )
+    return rows
+
+
+def _grid(template, n_mtbf: int, n_pol: int):
+    """K = n_mtbf x n_pol campaign: seeded outage schedules crossed with
+    (evacuation, ckpt_interval) policy rows; the last MTBF level is INF —
+    the never-failing control rides inside the same compiled program."""
+    k = n_mtbf * n_pol
+    levels = jnp.concatenate([
+        jnp.logspace(2.5, 3.5, n_mtbf - 1, dtype=jnp.float32),
+        jnp.asarray([float(INF)], jnp.float32),
+    ])
+    mtbfs = jnp.repeat(levels, n_pol)
+    evac = jnp.tile(
+        jnp.asarray([True, False] * (n_pol // 2) + [True] * (n_pol % 2)),
+        n_mtbf)
+    ckpt = jnp.tile(
+        jnp.linspace(20_000.0, 80_000.0, n_pol, dtype=jnp.float32), n_mtbf)
+    keys = jax.random.split(jax.random.PRNGKey(11), k)
+    outs = jax.vmap(
+        lambda key, m: workload.host_outages(key, 2, 3, 2, m, 400.0)
+    )(keys, mtbfs)
+    pols = jax.vmap(
+        lambda e, c: template.policy.replace(evacuation=e, ckpt_interval=c)
+    )(evac, ckpt)
+    return broadcast_campaign(template, k, outages=outs, policy=pols), k
+
+
+def bench_reliability_sweep(n_mtbf: int = 4, n_pol: int = 4,
+                            n_rep: int = 3) -> dict:
+    template = scenarios.reliability_scenario(jax.random.PRNGKey(0))
+    batched, k = _grid(template, n_mtbf, n_pol)
+
+    res = run_campaign(batched)                      # compile + warm
+    jax.block_until_ready(res)
+    t0 = time.perf_counter()
+    for _ in range(n_rep):
+        res = run_campaign(batched)
+        jax.block_until_ready(res)
+    wall = (time.perf_counter() - t0) / n_rep
+
+    # acceptance: the vmapped grid row-matches a per-scenario Python loop
+    fn = jax.jit(simulate)
+    match = True
+    for i in range(k):
+        row = template.replace(
+            policy=jax.tree.map(lambda x: x[i], batched.policy),
+            outages=jax.tree.map(lambda x: x[i], batched.outages))
+        r = fn(row)
+        for f in ("n_finished", "sla_violations", "downtime",
+                  "n_evacuations", "makespan"):
+            if not np.array_equal(np.array(getattr(res, f)[i]),
+                                  np.array(getattr(r, f))):
+                match = False
+    n_cl = template.cloudlets.n_cloudlets
+    viol = np.array(res.sla_violations)
+    return {
+        "jnp": {
+            "grid_points": k,
+            "wall_s": wall,
+            "scenarios_per_s": k / wall,
+        },
+        "vmap_matches_loop": bool(match),
+        "all_finished": bool((np.array(res.n_finished) == n_cl).all()),
+        "sla_violations_min": int(viol.min()),
+        "sla_violations_max": int(viol.max()),
+        "total_downtime_s": float(np.sum(np.array(res.downtime))),
+        "total_evacuations": int(np.sum(np.array(res.n_evacuations))),
+    }
+
+
+def run() -> dict:
+    return {
+        "backend": jax.default_backend(),
+        "evacuation_demo": bench_evacuation_demo(),
+        "reliability_sweep": bench_reliability_sweep(),
+    }
+
+
+def main() -> None:
+    report = run()
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {OUT_PATH}")
+    d = report["evacuation_demo"]
+    print(f"reliability,evacuation_demo,"
+          f"violations={d['evacuated']['sla_violations']}"
+          f"/{d['restart']['sla_violations']},"
+          f"downtime={d['evacuated']['downtime_s']:.1f}"
+          f"/{d['restart']['downtime_s']:.1f},"
+          f"beats={d['evac_beats_restart']}")
+    g = report["reliability_sweep"]
+    print(f"reliability,sweep,points={g['jnp']['grid_points']},"
+          f"scenarios_per_s={g['jnp']['scenarios_per_s']:.3f},"
+          f"vmap_matches_loop={g['vmap_matches_loop']}")
+
+
+if __name__ == "__main__":
+    main()

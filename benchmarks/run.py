@@ -34,6 +34,8 @@ SECTIONS = (
      "autoscale_workload", "BENCH_autoscale.json"),
     ("Live VM migration across federated DCs (-> BENCH_migration.json)",
      "live_migration", "BENCH_migration.json"),
+    ("Host failures + SLA reliability (-> BENCH_reliability.json)",
+     "reliability", "BENCH_reliability.json"),
     ("Serving scheduler (beyond paper: CloudSim-driven batching)",
      "serving_sched", None),
     ("Energy + topology (the paper's future work, implemented)",

@@ -17,6 +17,7 @@ from repro.core.entities import (
     Cloudlets,
     Hosts,
     Market,
+    Outages,
     Policy,
     Scenario,
     SimResult,
@@ -36,6 +37,7 @@ from repro.core.step import (
     AutoscaleInstrument,
     Instrument,
     MigrationInstrument,
+    ReliabilityInstrument,
     StepEvent,
     TraceInstrument,
     UtilizationTimelineInstrument,
@@ -59,9 +61,10 @@ from repro.core import (
 
 __all__ = [
     "INF", "SPACE_SHARED", "TIME_SHARED",
-    "Cloudlets", "Hosts", "Market", "Policy", "Scenario",
+    "Cloudlets", "Hosts", "Market", "Outages", "Policy", "Scenario",
     "SimResult", "SimState", "VMRequests", "finished_mask",
     "AutoscaleInstrument", "History", "Instrument", "MigrationInstrument",
+    "ReliabilityInstrument",
     "StepEvent", "TraceInstrument", "UtilizationTimelineInstrument",
     "init_state", "event_step",
     "simulate", "simulate_history", "simulate_instrumented", "simulate_trace",

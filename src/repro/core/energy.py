@@ -161,8 +161,9 @@ def power_draw(
         idle = jnp.where(
             pm.gate_idle[:, None] & ~host_occupied(scn, state), 0.0, idle
         )
+    # a failed host draws nothing — it is off, not idling (DESIGN.md §9)
     watts = jnp.where(
-        scn.hosts.exists,
+        scn.hosts.exists & state.host_up,
         idle + (pm.watts_peak - pm.watts_idle)[:, None] * util,
         0.0,
     )

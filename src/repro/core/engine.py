@@ -68,11 +68,15 @@ def init_state(scn: Scenario) -> SimState:
         vm_dc=vms.dc.astype(i32),
         vm_placed=jnp.zeros((V,), bool),
         vm_failed=jnp.zeros((V,), bool),
+        vm_evicted=jnp.zeros((V,), bool),
         vm_avail_t=jnp.full((V,), INF, f32),
         vm_released=jnp.zeros((V,), bool),
         vm_migrations=jnp.zeros((V,), i32),
         vm_mig_src=jnp.full((V,), -1, i32),
         pool_active=jnp.zeros((V,), bool),
+        # a schedule that starts down (fail_t[k] <= 0) flips this at the
+        # first event, before anything is placed
+        host_up=jnp.asarray(hosts.exists),
         free_ram=jnp.where(hosts.exists, hosts.ram_mb, 0.0),
         free_storage=jnp.where(hosts.exists, hosts.storage_mb, 0.0),
         free_bw=jnp.where(hosts.exists, hosts.bw_mbps, 0.0),
@@ -80,6 +84,7 @@ def init_state(scn: Scenario) -> SimState:
         cl_vm=cls.vm.astype(i32),
         cl_ready_t=jnp.where(cls.vm >= 0, step_mod.ready_times(scn), INF),
         rem_mi=jnp.where(cls.exists, cls.length_mi, 0.0),
+        cl_rollback_mi=jnp.zeros((C,), f32),
         started=jnp.zeros((C,), bool),
         start_t=jnp.full((C,), INF, f32),
         finish_t=jnp.where(cls.exists, INF, -INF),  # ghosts count as finished
@@ -91,6 +96,8 @@ def init_state(scn: Scenario) -> SimState:
         storage_cost=jnp.zeros((D,), f32),
         bw_cost=jnp.zeros((D,), f32),
         energy_j=jnp.zeros((D,), f32),
+        vm_downtime=jnp.zeros((V,), f32),
+        n_evacuations=jnp.asarray(0, i32),
     )
 
 

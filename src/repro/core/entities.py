@@ -90,6 +90,10 @@ class Cloudlets:
     submit time to the least-loaded active VM (including activated pool VMs),
     which is what makes horizontal auto-scaling visible to the application
     (DESIGN.md §7).  ``vm >= 0`` rows keep CloudSim's fixed binding.
+
+    ``deadline`` is the per-cloudlet SLA: the absolute sim time by which the
+    row must finish (INF = no guarantee).  A row violates its SLA when it
+    finishes later — or never finishes at all (DESIGN.md §9).
     """
 
     vm: Array         # [C] i32  target VM (-1: broker-dispatched at submit)
@@ -98,11 +102,42 @@ class Cloudlets:
     submit_t: Array   # [C] f32
     input_mb: Array   # [C] f32  staged in before execution (SAN transfer)
     output_mb: Array  # [C] f32  staged out at completion
+    deadline: Array   # [C] f32  absolute SLA finish time (INF: none)
     exists: Array     # [C] bool
 
     @property
     def n_cloudlets(self) -> int:
         return self.vm.shape[0]
+
+
+@pytree_dataclass
+class Outages:
+    """Per-host failure/repair schedule, ``[D, H, K]`` per field (K = max
+    outages per host, a static shape; DESIGN.md §9).
+
+    Times are absolute sim seconds; a host is *down* during
+    ``[fail_t[k], repair_t[k])``.  Windows along K are disjoint and sorted by
+    construction (``workload.host_outages``); INF entries are padding ("no
+    k-th outage"), which is how an MTBF = ∞ control shares shapes — and the
+    compiled program — with failing rows in one vmapped campaign.
+    """
+
+    fail_t: Array    # [D,H,K] f32 outage starts (INF: padding)
+    repair_t: Array  # [D,H,K] f32 outage ends
+
+    def down_at(self, t) -> Array:
+        """[D, H] bool — host inside an outage window at time ``t``."""
+        return jnp.any((self.fail_t <= t) & (t < self.repair_t), axis=-1)
+
+    def next_fail_after(self, t) -> Array:
+        """[D, H] earliest failure time strictly after ``t`` (INF: none)."""
+        return jnp.min(jnp.where(self.fail_t > t, self.fail_t, INF), axis=-1)
+
+    def next_repair_after(self, t) -> Array:
+        """[D, H] earliest repair time strictly after ``t`` (INF: none)."""
+        return jnp.min(
+            jnp.where(self.repair_t > t, self.repair_t, INF), axis=-1
+        )
 
 
 @pytree_dataclass
@@ -141,6 +176,15 @@ class Policy:
     migrate_consolidate_thresh: Array  # scalar f32: a DC below this drains
                                      #   its idlest VM toward the busiest
                                      #   feasible peer (0 disables)
+    # --- reliability (host failures + SLA), DESIGN.md §9 ---
+    ckpt_interval: Array      # scalar f32: checkpoint spacing in per-core MI —
+                              #   a host failure rolls in-flight cloudlets back
+                              #   to the last completed multiple (INF: restart
+                              #   from zero)
+    evacuation: Array         # scalar bool: ReliabilityInstrument proactively
+                              #   drains doomed hosts to federation peers
+    evac_lead_s: Array        # scalar f32: evacuation alarm this long before
+                              #   each scheduled host failure
 
 
 @pytree_dataclass(static=("max_steps", "sweep_impl"))
@@ -149,7 +193,11 @@ class Scenario:
 
     ``power`` and ``topology`` (core/energy.py) are optional: the paper's
     stated future work — energy accounting and BRITE-style inter-DC links —
-    activate when provided and change nothing when None.
+    activate when provided and change nothing when None.  ``outages`` (an
+    ``Outages`` schedule, usually from ``workload.host_outages``) activates
+    the reliability subsystem — K_FAILURE/K_REPAIR events, eviction with
+    checkpoint rollback, SLA/downtime accounting (DESIGN.md §9) — and
+    likewise changes nothing when None.
 
     ``instruments`` holds *extra* step.Instrument observables, threaded
     through the event loop after the defaults (sensor, market, energy); their
@@ -163,6 +211,7 @@ class Scenario:
     policy: Policy
     power: object = None        # energy.PowerModel | None
     topology: object = None     # energy.Topology | None
+    outages: object = None      # Outages | None — per-host failure schedule
     instruments: tuple = ()     # tuple[step.Instrument, ...] extra observables
     max_steps: int = 0          # 0 -> derived bound (see step.default_max_steps)
     sweep_impl: str = "jnp"     # "jnp" | "pallas" — advance-sweep implementation
@@ -178,7 +227,12 @@ class SimState:
     vm_host: Array       # [V] i32 host index within vm_dc, -1 if unplaced
     vm_dc: Array         # [V] i32 current datacenter (!= origin after migration)
     vm_placed: Array     # [V] bool
-    vm_failed: Array     # [V] bool (terminal: creation rejected everywhere)
+    vm_failed: Array     # [V] bool (terminal: creation rejected everywhere —
+                         #          never set, and never cleared, by the
+                         #          transient host-failure path, DESIGN.md §9)
+    vm_evicted: Array    # [V] bool transient: lost its slot to a host failure,
+                         #          re-queued through the creation path; cleared
+                         #          once placed and available again
     vm_avail_t: Array    # [V] f32 creation/migration completes at this time
     vm_released: Array   # [V] bool resources returned after all work done
     vm_migrations: Array # [V] i32
@@ -188,6 +242,8 @@ class SimState:
     pool_active: Array   # [V] bool pool row activated by the autoscaler
                          #          (inactive -> activating -> active -> released)
     # --- host free capacity (provisioner view) ---
+    host_up: Array       # [D,H] bool host currently powered/working (failure
+                         #            windows flip this, DESIGN.md §9)
     free_ram: Array      # [D,H] f32
     free_storage: Array  # [D,H] f32
     free_bw: Array       # [D,H] f32
@@ -197,6 +253,8 @@ class SimState:
                          #         vm == -1 are broker-dispatched at submit time
     cl_ready_t: Array    # [C] f32 stage-in completes (INF until dispatched)
     rem_mi: Array        # [C] f32 remaining million-instructions (per core)
+    cl_rollback_mi: Array  # [C] f32 work re-done after failures: total MI added
+                           #         back to rem_mi by checkpoint rollbacks
     started: Array       # [C] bool
     start_t: Array       # [C] f32 (INF until started)
     finish_t: Array      # [C] f32 (INF until finished)
@@ -210,6 +268,9 @@ class SimState:
     storage_cost: Array  # [D] f32
     bw_cost: Array       # [D] f32
     energy_j: Array      # [D] f32 (0 unless Scenario.power is set)
+    # --- reliability accounting (0 unless Scenario.outages is set) ---
+    vm_downtime: Array   # [V] f32 seconds spent evicted/awaiting recovery
+    n_evacuations: Array # scalar i32 proactive drains committed
 
 
 @pytree_dataclass
@@ -236,6 +297,12 @@ class SimResult:
     energy_j: Array      # [D]
     total_cost: Array    # scalar
     end_t: Array         # scalar: clock when the loop exited
+    # --- SLA / reliability (DESIGN.md §9) ---
+    sla_violations: Array  # scalar i32: existing cloudlets that finished past
+                           #             their deadline, or never finished
+    downtime: Array        # scalar f32: total VM-seconds lost to failures
+                           #             (evicted + recovery transfer windows)
+    n_evacuations: Array   # scalar i32: proactive pre-failure drains
 
 
 def finished_mask(res: SimResult) -> Array:

@@ -74,6 +74,22 @@ def vm_done(scn: Scenario, state: SimState) -> Array:
     return jnp.where(scn.vms.pool, state.vm_released, done)
 
 
+def sla_violation_mask(scn: Scenario, state: SimState) -> Array:
+    """[C] bool — existing cloudlet with a real deadline (< INF) that
+    finished past it, or never finished at all (finish_t stuck at INF).
+
+    The SLA ledger of DESIGN.md §9: ``finalize_result`` sums this into
+    ``SimResult.sla_violations``, so vmapped campaigns get per-row violation
+    counts for MTBF x ckpt x policy grids with no post-processing.
+    """
+    cls = scn.cloudlets
+    return (
+        cls.exists
+        & (cls.deadline < INF / 2)
+        & (state.finish_t > cls.deadline)
+    )
+
+
 def vm_outstanding_mi(scn: Scenario, state: SimState) -> Array:
     """[V] assigned-but-unfinished remaining MI per VM.
 

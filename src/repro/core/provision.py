@@ -77,12 +77,95 @@ def release_pool_vms(scn: Scenario, state: SimState, rel: Array) -> SimState:
     )
 
 
+def apply_outages(scn: Scenario, state: SimState) -> SimState:
+    """Commit host failure/repair transitions due at the current clock
+    (``Scenario.outages`` schedule; the K_FAILURE/K_REPAIR clock stops in
+    step.py land the loop exactly on the edges — DESIGN.md §9).
+
+    **Failure** (host up, schedule says down): every resident VM — placed,
+    not yet released — is *evicted*: placement cleared, pending-move marker
+    reset, and its in-flight cloudlets roll back to the last completed
+    ``Policy.ckpt_interval`` checkpoint (per-core MI; INF floors the kept
+    work to zero — restart-from-zero).  The host's free ledger zeroes so
+    nothing can land on it while down.  Eviction is the *transient*
+    ``vm_evicted`` state, never the terminal ``vm_failed``: the row stays
+    due, so ``provision_due_vms`` re-queues it through the ordinary creation
+    path — a federation peer if one fits, the repaired host later otherwise
+    — and it simply retries until capacity appears.
+
+    **Repair** (host down, schedule says up): the host returns *empty* —
+    free ledger restored to full capacity (its residents were evicted at the
+    failure edge, so nothing holds resources on it).
+
+    Also clears ``vm_evicted`` for VMs that are placed and available again,
+    which stops the engine's downtime integral for them.
+    """
+    if scn.outages is None:
+        return state
+    hosts, vms, cls, pol = scn.hosts, scn.vms, scn.cloudlets, scn.policy
+    down = scn.outages.down_at(state.t) & hosts.exists
+    up_next = hosts.exists & ~down
+    newly_down = state.host_up & down
+    newly_up = ~state.host_up & up_next
+
+    # recovered: re-placed and past its recovery transfer -> no longer down
+    recovered = (
+        state.vm_evicted & state.vm_placed & (state.vm_avail_t <= state.t)
+    )
+
+    d = jnp.clip(state.vm_dc, 0, hosts.n_dc - 1)
+    h = jnp.clip(state.vm_host, 0, hosts.n_hosts - 1)
+    evict = (
+        vms.exists & state.vm_placed & ~state.vm_released & newly_down[d, h]
+    )
+
+    # checkpoint rollback: executed work floors to the last completed
+    # ckpt_interval multiple; the delta is re-done work (cl_rollback_mi)
+    cl_evict = (
+        cls.exists & (state.cl_vm >= 0)
+        & evict[jnp.clip(state.cl_vm, 0, vms.n_vms - 1)]
+        & state.started & ~policies.cloudlet_finished(state)
+    )
+    executed = cls.length_mi - state.rem_mi
+    ckpt = jnp.maximum(pol.ckpt_interval, 1e-6)
+    kept = jnp.where(
+        pol.ckpt_interval < INF / 2,
+        jnp.minimum(jnp.floor(executed / ckpt) * ckpt, executed),
+        0.0,
+    )
+    new_rem = jnp.where(cl_evict, cls.length_mi - kept, state.rem_mi)
+
+    def ledger(free, capacity):
+        return jnp.where(
+            newly_down, 0.0, jnp.where(newly_up, capacity, free)
+        )
+
+    return state.replace(
+        host_up=up_next,
+        vm_placed=state.vm_placed & ~evict,
+        vm_host=jnp.where(evict, -1, state.vm_host),
+        vm_dc=jnp.where(evict, vms.dc, state.vm_dc),
+        vm_avail_t=jnp.where(evict, INF, state.vm_avail_t),
+        vm_mig_src=jnp.where(evict, -1, state.vm_mig_src),
+        vm_evicted=(state.vm_evicted & ~recovered) | evict,
+        rem_mi=new_rem,
+        cl_rollback_mi=state.cl_rollback_mi + (new_rem - state.rem_mi),
+        free_ram=ledger(state.free_ram, hosts.ram_mb),
+        free_storage=ledger(state.free_storage, hosts.storage_mb),
+        free_bw=ledger(state.free_bw, hosts.bw_mbps),
+        free_cores=ledger(
+            state.free_cores, hosts.cores.astype(jnp.float32)),
+    )
+
+
 def resource_feasible(scn: Scenario, state: SimState, v: Array) -> Array:
     """[D, H] hosts meeting RAM/storage/bandwidth for VM row ``v`` (no core
-    check — that is the slot-vs-stack distinction, see ``slot_feasible``)."""
+    check — that is the slot-vs-stack distinction, see ``slot_feasible``).
+    A failed host (``host_up`` False) is never feasible."""
     hosts, vms = scn.hosts, scn.vms
     return (
         hosts.exists
+        & state.host_up
         & (state.free_ram >= vms.ram_mb[v])
         & (state.free_storage >= vms.storage_mb[v])
         & (state.free_bw >= vms.bw_mbps[v])
@@ -208,7 +291,12 @@ def provision_due_vms(scn: Scenario, state: SimState) -> tuple[SimState, Array]:
             vm_host=st.vm_host.at[v].set(jnp.where(found, hsel, st.vm_host[v])),
             vm_dc=st.vm_dc.at[v].set(jnp.where(found, dsel, st.vm_dc[v])),
             vm_placed=st.vm_placed.at[v].set(st.vm_placed[v] | found),
-            vm_failed=st.vm_failed.at[v].set(st.vm_failed[v] | (due & ~found)),
+            # An ordinary request nothing can host is rejected terminally
+            # (CloudSim semantics).  A failure-evicted row is NOT: it stays
+            # transiently homeless (vm_evicted) and retries at every event
+            # until capacity — possibly its repaired host — fits it.
+            vm_failed=st.vm_failed.at[v].set(
+                st.vm_failed[v] | (due & ~found & ~st.vm_evicted[v])),
             vm_avail_t=st.vm_avail_t.at[v].set(
                 jnp.where(found,
                           st.t + boot + jnp.where(migrated, delay, 0.0),
@@ -244,7 +332,8 @@ def provision_due_vms(scn: Scenario, state: SimState) -> tuple[SimState, Array]:
 
 
 def live_migrate(
-    scn: Scenario, state: SimState, v: Array, dst_dc: Array, ok: Array
+    scn: Scenario, state: SimState, v: Array, dst_dc: Array, ok: Array,
+    host_ok: Array | None = None,
 ) -> tuple[SimState, Array]:
     """Commit one runtime VM move decided by the CloudCoordinator policies
     (step.MigrationInstrument, DESIGN.md §8).
@@ -260,14 +349,18 @@ def live_migrate(
     bandwidth meter, exactly like a creation-time federation migration.
 
     ``v``/``dst_dc`` are traced scalars; ``ok`` gates the whole commit, so a
-    disabled policy is a no-op inside the same compiled program.  Returns
-    ``(state', moved)``.
+    disabled policy is a no-op inside the same compiled program.  ``host_ok``
+    (``[D, H]`` bool) further restricts the landing slot — the evacuation
+    coordinator passes its safe-host mask so a drain never lands inside the
+    blast radius it is fleeing (DESIGN.md §9).  Returns ``(state', moved)``.
     """
     hosts, vms, pol = scn.hosts, scn.vms, scn.policy
     D, H = hosts.cores.shape
     V = vms.n_vms
 
     fits = slot_feasible(scn, state, v)[dst_dc]                   # [H]
+    if host_ok is not None:
+        fits = fits & host_ok[dst_dc]
     host_key = jnp.where(
         pol.best_fit,
         state.free_ram[dst_dc] - vms.ram_mb[v],

@@ -13,6 +13,9 @@
 * ``consolidation_scenario`` / ``balance_scenario``: runtime (live) VM
   migration across federated DCs — energy consolidation under an idle-gated
   power model, and load balancing with progress preservation (DESIGN.md §8).
+* ``reliability_scenario`` / ``evacuation_scenario``: host failures under a
+  seeded (or deterministic) outage schedule — checkpoint rollback, SLA
+  deadlines, proactive pre-failure evacuation (DESIGN.md §9).
 
 All static-workload builders produce numpy-backed pytrees; nothing touches
 devices until the engine is jitted, so a 100k-host scenario costs megabytes
@@ -55,6 +58,9 @@ def make_policy(
     live_migration: bool = False,
     migrate_balance_thresh: float = 1e9,
     migrate_consolidate_thresh: float = 0.0,
+    ckpt_interval: float = 3.0e38,
+    evacuation: bool = False,
+    evac_lead_s: float = 60.0,
 ) -> Policy:
     return Policy(
         host_policy=jnp.asarray(host_policy, jnp.int32),
@@ -74,6 +80,9 @@ def make_policy(
             migrate_balance_thresh, jnp.float32),
         migrate_consolidate_thresh=jnp.asarray(
             migrate_consolidate_thresh, jnp.float32),
+        ckpt_interval=jnp.asarray(ckpt_interval, jnp.float32),
+        evacuation=jnp.asarray(evacuation, bool),
+        evac_lead_s=jnp.asarray(evac_lead_s, jnp.float32),
     )
 
 
@@ -141,13 +150,17 @@ def make_cloudlets(
     cores: np.ndarray | int = 1,
     input_mb: float = 0.3,
     output_mb: float = 0.3,
+    deadline: np.ndarray | float = 3.0e38,
 ) -> Cloudlets:
-    """Rows are re-sorted by (submit_t, row) — FCFS is row order downstream."""
+    """Rows are re-sorted by (submit_t, row) — FCFS is row order downstream.
+
+    ``deadline`` is the absolute SLA finish time (default INF: none)."""
     vm = np.asarray(vm, _I)
     n = vm.shape[0]
     length_mi = np.asarray(length_mi, _F)
     submit_t = np.broadcast_to(np.asarray(submit_t, _F), (n,))
     cores = np.broadcast_to(np.asarray(cores, _I), (n,))
+    deadline = np.broadcast_to(np.asarray(deadline, _F), (n,))
     order = np.argsort(submit_t, kind="stable")
     return Cloudlets(
         vm=jnp.asarray(vm[order]),
@@ -156,6 +169,7 @@ def make_cloudlets(
         submit_t=jnp.asarray(submit_t[order]),
         input_mb=jnp.full((n,), input_mb, _F),
         output_mb=jnp.full((n,), output_mb, _F),
+        deadline=jnp.asarray(deadline[order]),
         exists=jnp.ones((n,), bool),
     )
 
@@ -427,6 +441,128 @@ def consolidation_scenario(*, n_spare: int = 4, n_tasks: int = 4,
                     power=PowerModel.uniform(D, idle=idle_w, peak=peak_w,
                                              gate_idle=True),
                     instruments=(MigrationInstrument(),),
+                    max_steps=max_steps)
+
+
+# ---------------------------------------------------------------------------
+# Reliability scenarios (host failures + SLA, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def reliability_scenario(key=None, *, n_dc: int = 2, hosts_per_dc: int = 3,
+                         n_vms: int = 4, cl_per_vm: int = 2,
+                         task_mi: float = 100_000.0, mips: float = 1000.0,
+                         n_outages: int = 2, mtbf_s: float = 700.0,
+                         mttr_s: float = 400.0,
+                         ckpt_interval: float = 3.0e38,
+                         evacuation: bool = False,
+                         evac_lead_s: float = 40.0,
+                         deadline_slack: float = 6.0,
+                         federation: bool = True,
+                         sensor_interval: float = 50.0,
+                         migration_fixed_s: float = 30.0,
+                         horizon: float = 20_000.0) -> Scenario:
+    """Seeded host-failure scenario: a federated fleet under exponential
+    MTBF/MTTR outages (``workload.host_outages``), per-cloudlet deadlines at
+    ``deadline_slack`` x the ideal runtime, checkpoint rollback, and the
+    proactive-evacuation coordinator (DESIGN.md §9).
+
+    ``key=None`` (or ``mtbf_s >= INF``) yields the never-failing control
+    with identical shapes, so an MTBF x ckpt x policy campaign vmaps the
+    control and its failing peers through one compiled program.
+    """
+    from repro.core import workload
+    from repro.core.step import ReliabilityInstrument
+
+    hosts = uniform_hosts(n_dc, hosts_per_dc, cores=1, mips=mips,
+                          ram_mb=1024.0, storage_mb=2_000_000.0)
+    vms = uniform_vms(n_vms, dc=0, cores=1, mips=mips, ram_mb=512.0,
+                      storage_mb=1024.0, image_mb=1024.0)
+    n_cl = n_vms * cl_per_vm
+    ideal_s = cl_per_vm * task_mi / mips
+    cls = make_cloudlets(np.arange(n_cl) % n_vms, np.full(n_cl, task_mi),
+                         np.zeros(n_cl), input_mb=0.0, output_mb=0.0,
+                         deadline=deadline_slack * ideal_s)
+    if key is None:
+        outages = workload.no_outages(n_dc, hosts_per_dc, n_outages)
+    else:
+        outages = workload.host_outages(
+            key, n_dc, hosts_per_dc, n_outages, mtbf_s, mttr_s)
+    pol = make_policy(
+        host_policy=SPACE_SHARED, vm_policy=SPACE_SHARED,
+        core_reserving=True, federation=federation,
+        sensor_interval=sensor_interval,
+        migration_fixed_s=migration_fixed_s, horizon=horizon,
+        ckpt_interval=ckpt_interval, evacuation=evacuation,
+        evac_lead_s=evac_lead_s)
+    n_out = n_dc * hosts_per_dc * n_outages
+    max_steps = (4 * (n_cl + n_vms) + 4 * n_out + 4 * n_vms
+                 + 2 * int(horizon / sensor_interval) + 200)
+    return Scenario(hosts=hosts, vms=vms, cloudlets=cls,
+                    market=uniform_market(n_dc), policy=pol,
+                    outages=outages,
+                    instruments=(ReliabilityInstrument(),),
+                    max_steps=max_steps)
+
+
+def evacuation_scenario(*, evacuation: bool = True,
+                        ckpt_interval: float = 100_000.0,
+                        fail_at: float = 300.0,
+                        repair_after: float = 5000.0,
+                        n_workers: int = 2,
+                        task_mi: float = 600_000.0,
+                        mips: float = 1000.0,
+                        deadline: float = 800.0,
+                        evac_lead_s: float = 50.0,
+                        sensor_interval: float = 50.0,
+                        migration_fixed_s: float = 30.0,
+                        interdc_bw_mbps: float = 100.0,
+                        horizon: float = 6000.0,
+                        idle_w: float = 93.0,
+                        peak_w: float = 135.0) -> Scenario:
+    """Deterministic reliability demo: DC0's only host is scheduled to fail
+    at ``fail_at``; DC1 holds exactly enough spare slots.
+
+    With evacuation on, the coordinator drains every worker to DC1 at the
+    ``evac_lead_s`` alarm — stop-and-copy, progress preserved — and each
+    600s cloudlet finishes ~40s late: inside its ``deadline``, zero
+    downtime.  The restart-from-zero control (``evacuation=False,
+    ckpt_interval=INF``) loses ``fail_at`` seconds of work per cloudlet plus
+    a recovery transfer it books as downtime, and misses every deadline —
+    at the same energy order of magnitude, in the *same compiled program*
+    (`evacuation`/`ckpt_interval` are traced policy data a campaign vmaps;
+    benchmarks/reliability.py measures the grid).
+    """
+    from repro.core import workload
+    from repro.core.energy import PowerModel
+    from repro.core.step import ReliabilityInstrument
+
+    hosts = uniform_hosts(2, 1, cores=n_workers, mips=mips, ram_mb=4096.0,
+                          storage_mb=2_000_000.0)
+    vms = uniform_vms(n_workers, dc=0, cores=1, mips=mips, ram_mb=256.0,
+                      storage_mb=1024.0, image_mb=1024.0)
+    cls = make_cloudlets(np.arange(n_workers), np.full(n_workers, task_mi),
+                         np.zeros(n_workers), input_mb=0.0, output_mb=0.0,
+                         deadline=deadline)
+    outages = workload.no_outages(2, 1, 1)
+    outages = outages.replace(
+        fail_t=outages.fail_t.at[0, 0, 0].set(fail_at),
+        repair_t=outages.repair_t.at[0, 0, 0].set(fail_at + repair_after),
+    )
+    pol = make_policy(
+        host_policy=SPACE_SHARED, vm_policy=SPACE_SHARED,
+        core_reserving=True, federation=True,
+        sensor_interval=sensor_interval,
+        migration_fixed_s=migration_fixed_s,
+        interdc_bw_mbps=interdc_bw_mbps, horizon=horizon,
+        ckpt_interval=ckpt_interval, evacuation=evacuation,
+        evac_lead_s=evac_lead_s)
+    max_steps = (4 * (2 * n_workers) + 2 * int(horizon / sensor_interval)
+                 + 4 * n_workers + 100)
+    return Scenario(hosts=hosts, vms=vms, cloudlets=cls,
+                    market=uniform_market(2), policy=pol,
+                    power=PowerModel.uniform(2, idle=idle_w, peak=peak_w),
+                    outages=outages,
+                    instruments=(ReliabilityInstrument(),),
                     max_steps=max_steps)
 
 

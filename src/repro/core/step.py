@@ -4,11 +4,12 @@
 drivers over one function — ``event_step`` — which advances the world by one
 event batch:
 
+    0. host failure/repair edges     (outage schedule: evict + roll back)
     1. instrument ``pre`` hooks      (Sensor tick lives here)
     2. VM lifecycle                  (release drained, place due requests)
     3. policy sweep                  (per-cloudlet MIPS rates)
-    4. next-event bound              (ready / request / migration / instrument
-                                      bounds / horizon)
+    4. next-event bound              (ready / request / migration / failure /
+                                      repair / instrument bounds / horizon)
     5. fused advance                 (min-time-to-completion + work depletion,
                                       jnp or Pallas — resolved once per driver)
     6. instrument ``post`` hooks     (market accrual, energy integration,
@@ -48,15 +49,23 @@ K_TICK = 4         # a federation Sensor refresh
 K_INSTRUMENT = 5   # a custom instrument clock stop
 K_HORIZON = 6      # the simulation horizon
 K_SCALE = 7        # an autoscaler evaluation tick (AutoscaleInstrument)
+K_FAILURE = 8      # a scheduled host failure (Scenario.outages)
+K_REPAIR = 9       # a failed host came back (empty)
 
 
 def default_max_steps(scn: Scenario) -> int:
     """Safety bound on event batches: starts + finishes + VM lifecycle + slack.
 
     Federation scenarios add ~horizon/sensor_interval tick events; builders
-    for those pass ``Scenario.max_steps`` explicitly.
+    for those pass ``Scenario.max_steps`` explicitly.  An outage schedule
+    adds its fail/repair edges plus per-edge eviction/evacuation slack
+    (schedule *shapes* are static, so this stays a Python int).
     """
-    return 4 * (scn.cloudlets.n_cloudlets + scn.vms.n_vms) + 260
+    extra = 0
+    if scn.outages is not None:
+        n_out = int(scn.outages.fail_t.size)
+        extra = 4 * n_out + 2 * scn.vms.n_vms
+    return 4 * (scn.cloudlets.n_cloudlets + scn.vms.n_vms) + 260 + extra
 
 
 def resolve_max_steps(scn: Scenario, instruments: tuple = ()) -> int:
@@ -397,10 +406,7 @@ class MigrationInstrument(Instrument):
         enabled = pol.federation & pol.live_migration
         due = enabled & (st.t >= last_t + pol.sensor_interval)
 
-        # arrivals: clear the in-flight pending-move marker
-        st = st.replace(vm_mig_src=jnp.where(
-            (st.vm_mig_src >= 0) & (st.vm_avail_t <= st.t),
-            -1, st.vm_mig_src))
+        st = _clear_arrived_moves(st)
 
         util = provision.demand_load(scn, st)                      # [D]
         cap = jnp.maximum(provision.dc_capacity_mips(scn), 1e-9)   # [D]
@@ -467,6 +473,114 @@ class MigrationInstrument(Instrument):
 
     def finalize(self, scn: Scenario, st: SimState, aux) -> dict:
         return {"n_balance": aux[1], "n_consolidate": aux[2]}
+
+
+def _clear_arrived_moves(st: SimState) -> SimState:
+    """Reset the pending-move marker for transfers that have landed — shared
+    bookkeeping for every instrument that commits ``provision.live_migrate``
+    moves (MigrationInstrument, ReliabilityInstrument)."""
+    return st.replace(vm_mig_src=jnp.where(
+        (st.vm_mig_src >= 0) & (st.vm_avail_t <= st.t),
+        -1, st.vm_mig_src))
+
+
+def _evac_candidate(scn: Scenario, st: SimState):
+    """(v, dst_dc, safe, ok) — the next proactive evacuation the coordinator
+    would commit right now: the usable VM with the most outstanding work on
+    a *doomed* host (scheduled to fail within ``evac_lead_s``), bound for
+    the least-loaded federation peer with a safe free slot (``safe`` is the
+    ``[D, H]`` landing mask).  Shared by ``ReliabilityInstrument.pre`` (the
+    commit) and ``.bound`` (the clock stop that keeps the drain going), so
+    they can never disagree.
+    """
+    pol, vms, hosts = scn.policy, scn.vms, scn.hosts
+    D = hosts.n_dc
+    nf = scn.outages.next_fail_after(st.t)                      # [D,H]
+    doomed = hosts.exists & st.host_up & (nf <= st.t + pol.evac_lead_s)
+    d = jnp.clip(st.vm_dc, 0, D - 1)
+    h = jnp.clip(st.vm_host, 0, hosts.n_hosts - 1)
+    cand = (
+        vms.exists & st.vm_placed & ~st.vm_released & ~st.vm_failed
+        & (st.vm_avail_t <= st.t) & doomed[d, h]
+    )
+    outstanding = policies.vm_outstanding_mi(scn, st)
+    v = jnp.argmax(jnp.where(cand, outstanding, -jnp.inf))
+    # destination: a peer DC with a free slot on a host that is neither down
+    # nor itself about to fail — evacuating into the blast radius is not a
+    # rescue; the commit passes ``safe`` to live_migrate so the landing
+    # host choice honours it too
+    safe = provision.slot_feasible(scn, st, v) & ~doomed
+    dst_ok = jnp.any(safe, axis=1) & (jnp.arange(D) != jnp.clip(
+        st.vm_dc[v], 0, D - 1))
+    util = provision.demand_load(scn, st)
+    dst = jnp.argmin(jnp.where(dst_ok, util, jnp.inf))
+    enabled = pol.federation & pol.evacuation
+    ok = enabled & jnp.any(cand) & jnp.any(dst_ok)
+    return v, dst, safe, ok
+
+
+@pytree_dataclass
+class ReliabilityInstrument(Instrument):
+    """Proactive evacuation ahead of scheduled host failures (DESIGN.md §9).
+
+    The failure *semantics* — K_FAILURE/K_REPAIR edges, eviction, checkpoint
+    rollback, downtime accrual — live in the engine (``provision.apply_outages``
+    + event_step), because revocation changes what happened, not what was
+    observed.  The failure *policy* rides the PR-1 hooks like the autoscaler
+    and the migration coordinator:
+
+    * ``bound()`` contributes an evacuation *alarm* — ``Policy.evac_lead_s``
+      before each host's next scheduled failure — as a clock stop, and while
+      a usable VM still sits on a doomed host with a feasible federation
+      peer, keeps the clock stopped (zero-length events) so the drain
+      commits one move per event.
+    * ``pre()`` commits that move through ``provision.live_migrate`` — the
+      §8 stop-and-copy machinery: progress preserved, source slot freed,
+      destination slot taken in the same event, transfer window through
+      ``vm_avail_t``, image billed on the inter-DC meter — and counts it in
+      ``SimState.n_evacuations``.
+
+    VMs with no feasible peer are left to the failure edge: eviction +
+    rollback + re-queue through the creation path.  Everything is gated by
+    ``Policy.federation & Policy.evacuation`` (both traced), so an
+    evacuating run and its fatalist control are one compiled program and
+    campaigns vmap MTBF x ckpt-interval x policy grids (tests/
+    test_reliability.py).  Statically a no-op when ``Scenario.outages`` is
+    None.  Alarm counts depend on the traced schedule, so scenarios
+    attaching this set ``Scenario.max_steps`` explicitly, like the
+    federation builders do.
+    """
+
+    name = "reliability"
+
+    def init(self, scn: Scenario):
+        return ()
+
+    def pre(self, scn: Scenario, st: SimState, aux):
+        if scn.outages is None:
+            return st, aux
+        st = _clear_arrived_moves(st)
+        v, dst, safe, ok = _evac_candidate(scn, st)
+        st, moved = provision.live_migrate(scn, st, v, dst, ok, host_ok=safe)
+        return st.replace(
+            n_evacuations=st.n_evacuations + moved.astype(jnp.int32)
+        ), aux
+
+    def bound(self, scn: Scenario, st: SimState, aux) -> Array:
+        if scn.outages is None:
+            return INF
+        pol, hosts = scn.policy, scn.hosts
+        nf = jnp.where(
+            hosts.exists & st.host_up,
+            scn.outages.next_fail_after(st.t), INF)
+        alarm = jnp.min(jnp.where(nf < INF / 2, nf - pol.evac_lead_s, INF))
+        future = jnp.where(alarm > st.t, alarm, INF)
+        # more to drain right now -> stop the clock (dt = 0); each event
+        # moves one VM, so the stop clears in at most |residents| events
+        _, _, _, ok_now = _evac_candidate(scn, st)
+        return jnp.where(
+            pol.federation & pol.evacuation,
+            jnp.where(ok_now, st.t, future), INF)
 
 
 @pytree_dataclass
@@ -610,6 +724,10 @@ def event_step(
     pol, cls, vms = scn.policy, scn.cloudlets, scn.vms
     instruments = ctx.instruments
 
+    # --- host failure/repair edges (Scenario.outages), before anything may
+    #     observe or use the dead hosts: evict residents, roll back work ---
+    st = provision.apply_outages(scn, st)
+
     # --- instrument pre hooks (Sensor tick refreshes sensed_load) ---
     aux = list(aux)
     for i, ins in enumerate(instruments):
@@ -629,8 +747,10 @@ def event_step(
     # --- next event bound from non-completion sources ---
     unready = cls.exists & (st.cl_ready_t > st.t)
     undispatched = cls.exists & (st.cl_vm < 0) & (cls.submit_t > st.t)
+    # evicted rows' request_t is in the past — they retry at *every* event
+    # (and wake on K_REPAIR / completions), so they contribute no bound
     unplaced = (
-        vms.exists & ~st.vm_placed & ~st.vm_failed
+        vms.exists & ~st.vm_placed & ~st.vm_failed & ~st.vm_evicted
         & (~vms.pool | st.pool_active)
     )
     migrating = vms.exists & st.vm_placed & (st.vm_avail_t > st.t)
@@ -641,6 +761,14 @@ def event_step(
         _min_where(st.vm_avail_t, migrating),
     ]
     cand_k = [K_READY, K_READY, K_VM_REQUEST, K_MIGRATION]
+    if scn.outages is not None:
+        ex = scn.hosts.exists
+        cand_t.append(jnp.min(jnp.where(
+            ex, scn.outages.next_fail_after(st.t), INF)))
+        cand_k.append(K_FAILURE)
+        cand_t.append(jnp.min(jnp.where(
+            ex, scn.outages.next_repair_after(st.t), INF)))
+        cand_k.append(K_REPAIR)
     for i, ins in enumerate(instruments):
         cand_t.append(ins.bound(scn, st, aux[i]))
         cand_k.append(ins.bound_kind)
@@ -685,6 +813,14 @@ def event_step(
         finish_t=jnp.where(newly_fin, t_next, st.finish_t),
         cpu_time=st.cpu_time + jnp.where(active, dt, 0.0),
     )
+    if scn.outages is not None:
+        # downtime integral: a VM is down while evicted and not yet usable
+        # again (intervals never span a recovery edge: vm_avail_t is a
+        # K_MIGRATION clock stop and apply_outages clears on arrival)
+        vm_down = st.vm_evicted & ~(st.vm_placed & (st.vm_avail_t <= ev.t0))
+        st = st.replace(
+            vm_downtime=st.vm_downtime + jnp.where(vm_down, dt, 0.0)
+        )
 
     # --- instrument post hooks (market, energy, observers) ---
     for i, ins in enumerate(instruments):
@@ -724,6 +860,10 @@ def finalize_result(scn: Scenario, st: SimState) -> SimResult:
         energy_j=st.energy_j,
         total_cost=total_cost,
         end_t=st.t,
+        sla_violations=jnp.sum(
+            policies.sla_violation_mask(scn, st).astype(jnp.int32)),
+        downtime=jnp.sum(st.vm_downtime),
+        n_evacuations=st.n_evacuations,
     )
 
 

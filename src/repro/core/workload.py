@@ -12,6 +12,9 @@ arrival-process grammar (DESIGN.md §7):
                           fixed iteration count, so jit/vmap-safe).
 * ``bursty_arrivals``   — on/off bursts: exponential off-gaps between bursts,
                           within-burst gaps at ``burst_rate``.
+* ``host_outages``      — per-host failure/repair schedules (exponential
+                          MTBF/MTTR), the reliability subsystem's input
+                          (DESIGN.md §9).
 
 Everything is a pure function of a ``jax.random`` key with **static shapes**
 (the arrival *count* is the shape; the *times* are traced), so campaigns
@@ -29,9 +32,58 @@ import jax
 import jax.numpy as jnp
 from jax import Array
 
-from repro.core.entities import Cloudlets
+from repro.core.entities import INF, Cloudlets, Outages
 
 _TWO_PI = 6.2831853
+
+
+def host_outages(
+    key: Array, n_dc: int, n_hosts: int, n_outages: int, mtbf_s, mttr_s
+) -> Outages:
+    """``[D, H, K]`` seeded exponential failure/repair schedule (DESIGN.md §9).
+
+    Up-gaps ~ Exp(mean ``mtbf_s``) and down-durations ~ Exp(mean ``mttr_s``)
+    alternate, so ``fail_t[k] = Σ_{i<=k} gap_i + Σ_{i<k} dur_i`` and
+    ``repair_t[k] = fail_t[k] + dur_k`` — windows are disjoint and sorted by
+    construction.  Shapes are static (``n_outages`` bounds failures per
+    host); everything else is traced, so campaigns vmap over
+    ``(key, mtbf, mttr)`` grids exactly like the arrival generators.
+    ``mtbf_s`` / ``mttr_s`` may be scalars or ``[D, H]`` arrays (per-host
+    reliability classes); ``mtbf_s >= INF`` pushes every failure past the
+    horizon — the static control with identical shapes, hence the same
+    compiled program as its failing peers.
+    """
+    k_up, k_down = jax.random.split(key)
+    shape = (n_dc, n_hosts, n_outages)
+    mtbf = jnp.broadcast_to(
+        jnp.asarray(mtbf_s, jnp.float32), (n_dc, n_hosts))[..., None]
+    # durations must stay finite: fail_t = cumsum(gaps) + excl-cumsum(durs)
+    # would go NaN on inf - inf otherwise
+    mttr = jnp.clip(
+        jnp.broadcast_to(jnp.asarray(mttr_s, jnp.float32),
+                         (n_dc, n_hosts))[..., None],
+        1e-6, 1e30)
+    gaps = jax.random.exponential(k_up, shape, jnp.float32) * mtbf
+    durs = jax.random.exponential(k_down, shape, jnp.float32) * mttr
+    cum_durs = jnp.cumsum(durs, axis=-1)
+    fail = jnp.cumsum(gaps, axis=-1) + (cum_durs - durs)
+    # mtbf >= INF means *never*, exactly: a sub-1 exponential draw times INF
+    # would otherwise land short of the padding sentinel
+    never = jnp.broadcast_to(mtbf >= INF / 2, shape)
+    return Outages(
+        fail_t=jnp.where(never, INF, jnp.minimum(fail, INF)),
+        repair_t=jnp.where(never, INF, jnp.minimum(fail + durs, INF)),
+    )
+
+
+def no_outages(n_dc: int, n_hosts: int, n_outages: int = 1) -> Outages:
+    """An all-INF schedule: hosts never fail, but the ``Outages`` attachment
+    (and so the compiled program) matches a failing campaign row's."""
+    shape = (n_dc, n_hosts, n_outages)
+    return Outages(
+        fail_t=jnp.full(shape, INF, jnp.float32),
+        repair_t=jnp.full(shape, INF, jnp.float32),
+    )
 
 
 def poisson_arrivals(key: Array, n: int, rate) -> Array:
@@ -108,10 +160,11 @@ def lognormal(key: Array, n: int, median, sigma) -> Array:
 
 def assemble_cloudlets(
     vm: Array, length_mi: Array, submit_t: Array,
-    cores=1, input_mb=0.0, output_mb=0.0,
+    cores=1, input_mb=0.0, output_mb=0.0, deadline=INF,
 ) -> Cloudlets:
     """Traced twin of ``scenarios.make_cloudlets``: jnp sort by submit time
-    (FCFS is row order downstream), everything vmappable."""
+    (FCFS is row order downstream), everything vmappable.  ``deadline`` is
+    the absolute SLA finish time (INF: none)."""
     n = submit_t.shape[0]
     order = jnp.argsort(submit_t, stable=True)
     bcast = lambda x, dt: jnp.broadcast_to(jnp.asarray(x, dt), (n,))[order]
@@ -122,6 +175,7 @@ def assemble_cloudlets(
         submit_t=jnp.asarray(submit_t, jnp.float32)[order],
         input_mb=bcast(input_mb, jnp.float32),
         output_mb=bcast(output_mb, jnp.float32),
+        deadline=bcast(deadline, jnp.float32),
         exists=jnp.ones((n,), bool),
     )
 
@@ -142,6 +196,7 @@ def generate_cloudlets(
     sigma_io=0.5,
     n_vms: int | None = None,
     cores: int = 1,
+    deadline_rel=None,
 ) -> Cloudlets:
     """One seeded dynamic workload -> a ``Cloudlets`` table.
 
@@ -150,7 +205,9 @@ def generate_cloudlets(
     ``(key, rate, …)`` grids.  ``n_vms=None`` emits service-routed rows
     (``vm == -1``, broker-dispatched); an int routes round-robin over that
     fleet.  For ``kind="bursty"``, ``n`` must divide into ``n_bursts`` and
-    ``rate`` is the within-burst rate.
+    ``rate`` is the within-burst rate.  ``deadline_rel`` (traced, seconds
+    after submission) attaches a per-cloudlet SLA deadline; None leaves the
+    rows unguaranteed (deadline = INF).
     """
     k_arr, k_len, k_in, k_out = jax.random.split(key, 4)
     if kind == "poisson":
@@ -177,6 +234,11 @@ def generate_cloudlets(
         jnp.full((n,), -1, jnp.int32) if n_vms is None
         else jnp.arange(n, dtype=jnp.int32) % n_vms
     )
+    deadline = (
+        INF if deadline_rel is None
+        else submit + jnp.asarray(deadline_rel, jnp.float32)
+    )
     return assemble_cloudlets(
-        vm, length, submit, cores=cores, input_mb=input_mb, output_mb=output_mb
+        vm, length, submit, cores=cores, input_mb=input_mb,
+        output_mb=output_mb, deadline=deadline,
     )

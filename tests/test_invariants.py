@@ -5,15 +5,20 @@ Four families, each phrased against the public Instrument/driver surface so
 they hold for *any* engine change, not one code path:
 
 * **work conservation** — integrating the piecewise-constant rates over the
-  emitted events reproduces each cloudlet's depleted work; finished rows
-  integrate to their full ``length_mi`` (within the engine's documented
-  float32 finish tolerance).
+  emitted events reproduces each cloudlet's depleted work *plus* whatever
+  checkpoint rollbacks re-queued (``SimState.cl_rollback_mi`` — zero without
+  failures, so the classic equality is the special case); finished rows
+  integrate to their full ``length_mi`` + re-done work (within the engine's
+  documented float32 finish tolerance).
 * **capacity** — granted host MIPS never exceeds host capacity at any event,
   and the free-resource ledgers (RAM/storage/bandwidth — cores too under
-  ``core_reserving``) never go negative.
+  ``core_reserving``) never go negative — including through failure
+  revocation and re-placement (DESIGN.md §9).
 * **time** — event times are non-decreasing with non-negative intervals
   (``simulate_history`` rows).
 * **federation gate** — ``n_migrations == 0`` whenever federation is off.
+* **reliability gate** — ``n_evacuations == 0`` and ``downtime == 0``
+  whenever the outage schedule is all-INF padding (MTBF = ∞).
 """
 import jax
 import jax.numpy as jnp
@@ -53,6 +58,13 @@ def _all_scenarios():
             key, scale_down_thresh=0.05)),
         ("consolidation", scenarios.consolidation_scenario()),
         ("balance", scenarios.balance_scenario()),
+        ("reliability", scenarios.reliability_scenario(
+            key, evacuation=True, ckpt_interval=25_000.0)),
+        ("reliability_inf", scenarios.reliability_scenario(
+            None, evacuation=True)),
+        ("evacuation", scenarios.evacuation_scenario()),
+        ("evacuation_ctrl", scenarios.evacuation_scenario(
+            evacuation=False, ckpt_interval=3.0e38)),
     ]
 
 
@@ -79,7 +91,11 @@ class _ConservationInstrument(step.Instrument):
         return st, aux + jnp.where(ev.active, ev.rate * ev.dt, 0.0)
 
     def finalize(self, scn, st, aux):
-        return {"executed_mi": aux, "rem_mi": st.rem_mi}
+        return {
+            "executed_mi": aux,
+            "rem_mi": st.rem_mi,
+            "rollback_mi": st.cl_rollback_mi,
+        }
 
 
 @pytree_dataclass
@@ -123,20 +139,28 @@ def test_conservation_and_capacity(name, scn):
     res, out = jax.jit(_run_instrumented)(
         scn, (_ConservationInstrument(), _CapacityInstrument()))
 
-    # --- work conservation: integral of rates == depleted work ---
+    # --- work conservation (modulo rollback): integral of rates ==
+    #     depleted work + MI re-queued by failure rollbacks (exactly zero
+    #     for every scenario without an outage schedule) ---
     executed = np.array(out["conservation"]["executed_mi"])
     rem = np.array(out["conservation"]["rem_mi"])
+    rollback = np.array(out["conservation"]["rollback_mi"])
     length = np.array(scn.cloudlets.length_mi)
     exists = np.array(scn.cloudlets.exists)
+    if scn.outages is None:
+        assert (rollback == 0).all(), f"{name}: rollback without outages"
+    assert (rollback >= 0).all(), f"{name}: negative rollback"
     np.testing.assert_allclose(
-        executed[exists], (length - rem)[exists], rtol=1e-4, atol=1.0,
-        err_msg=f"{name}: rate·dt integral != depleted work")
+        executed[exists], (length - rem + rollback)[exists],
+        rtol=1e-4, atol=1.0,
+        err_msg=f"{name}: rate·dt integral != depleted + rolled-back work")
     fin = np.isfinite(np.array(res.finish_t)) & (
         np.array(res.finish_t) < 1e30)
-    # finished rows executed their full submitted work (within the engine's
-    # documented finish tolerance, step._eps_mi)
+    # finished rows executed their full submitted work plus whatever the
+    # rollbacks made them re-do (within the engine's documented finish
+    # tolerance, step._eps_mi)
     np.testing.assert_allclose(
-        executed[fin], length[fin], rtol=2e-3, atol=1.0,
+        executed[fin], (length + rollback)[fin], rtol=2e-3, atol=1.0,
         err_msg=f"{name}: finished cloudlets lost work")
 
     # --- capacity: grants bounded, ledgers non-negative ---
@@ -153,8 +177,10 @@ def test_conservation_and_capacity(name, scn):
 @pytest.mark.parametrize(
     "name,scn",
     [s for s in _all_scenarios()
-     if s[0] in ("fig4_ss", "table1_fed", "autoscale", "consolidation")],
-    ids=["fig4_ss", "table1_fed", "autoscale", "consolidation"],
+     if s[0] in ("fig4_ss", "table1_fed", "autoscale", "consolidation",
+                 "reliability", "evacuation")],
+    ids=["fig4_ss", "table1_fed", "autoscale", "consolidation",
+         "reliability", "evacuation"],
 )
 def test_event_times_monotone(name, scn):
     res, hist = jax.jit(simulate_history)(scn)
@@ -169,8 +195,24 @@ def test_event_times_monotone(name, scn):
 @pytest.mark.parametrize("name,scn", _all_scenarios(), ids=_IDS)
 def test_no_migrations_with_federation_off(name, scn):
     """Forcing the traced federation flag off zeroes migrations everywhere —
-    creation-time overflow and the live MigrationInstrument alike."""
+    creation-time overflow, the live MigrationInstrument, and proactive
+    evacuation alike."""
     scn = scn.replace(policy=scn.policy.replace(
         federation=jnp.asarray(False)))
     res = jax.jit(simulate)(scn)
     assert int(res.n_migrations) == 0, name
+    assert int(res.n_evacuations) == 0, name
+
+
+@pytest.mark.parametrize("name,scn", _all_scenarios(), ids=_IDS)
+def test_no_failures_without_outage_windows(name, scn):
+    """MTBF = ∞ (an all-INF schedule — or no schedule at all) means the
+    reliability subsystem never fires: no evacuations, no downtime, no
+    rollback, even with the evacuation policy armed."""
+    if scn.outages is not None and bool(
+            np.any(np.array(scn.outages.fail_t) < 1e30)):
+        pytest.skip("scenario schedules real outages")
+    res, out = jax.jit(_run_instrumented)(scn, (_ConservationInstrument(),))
+    assert int(res.n_evacuations) == 0, name
+    assert float(res.downtime) == 0.0, name
+    assert (np.array(out["conservation"]["rollback_mi"]) == 0).all(), name

@@ -1,0 +1,269 @@
+"""Host failures + SLA-driven reliability (DESIGN.md §9).
+
+Covers the revocation half of the simulator the PR-4 suite could not: host
+failures are the first event that *takes grants back*, so these tests pin
+
+* the seeded outage-schedule generator (determinism, disjoint sorted
+  windows, the MTBF = ∞ control),
+* failure semantics — eviction, checkpoint rollback arithmetic, re-queue
+  through the creation path, downtime accounting,
+* the ``vm_failed`` contract: terminal creation rejection is *never*
+  resurrected by a repair, and transient host-down eviction never sets it,
+* proactive evacuation (progress preserved, deadlines met) vs the
+  restart-from-zero control — in the same compiled program, and
+* a vmapped MTBF x policy campaign row-matching a Python loop bitwise.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    INF,
+    broadcast_campaign,
+    run_campaign,
+    scenarios,
+    simulate,
+    workload,
+)
+
+pytestmark = pytest.mark.tier1
+
+
+def _mk(b=0):
+    return jax.random.PRNGKey(17 + b)
+
+
+# ---------------------------------------------------------------------------
+# outage-schedule generator
+# ---------------------------------------------------------------------------
+
+def test_host_outages_deterministic_and_sorted():
+    a = workload.host_outages(_mk(), 2, 3, 4, 500.0, 200.0)
+    b = workload.host_outages(_mk(), 2, 3, 4, 500.0, 200.0)
+    np.testing.assert_array_equal(np.array(a.fail_t), np.array(b.fail_t))
+    np.testing.assert_array_equal(np.array(a.repair_t), np.array(b.repair_t))
+    fail, repair = np.array(a.fail_t), np.array(a.repair_t)
+    # windows are disjoint and sorted: fail_k < repair_k <= fail_{k+1}
+    assert (repair > fail).all()
+    assert (fail[..., 1:] >= repair[..., :-1]).all()
+
+
+def test_host_outages_mtbf_inf_is_all_padding():
+    out = workload.host_outages(_mk(), 2, 2, 3, INF, 200.0)
+    assert (np.array(out.fail_t) >= float(INF)).all()
+    assert not bool(np.any(np.array(out.down_at(1e30))))
+
+
+def test_host_outages_vmappable_over_rate():
+    mtbfs = jnp.asarray([100.0, 1000.0, float(INF)], jnp.float32)
+    outs = jax.vmap(
+        lambda m: workload.host_outages(_mk(), 1, 2, 2, m, 50.0)
+    )(mtbfs)
+    assert outs.fail_t.shape == (3, 1, 2, 2)
+    # same key -> same unit draws, scaled by MTBF: later first failure
+    first = np.array(outs.fail_t)[:, 0, 0, 0]
+    assert first[0] < first[1] < first[2]
+
+
+# ---------------------------------------------------------------------------
+# failure semantics: eviction, rollback, re-queue
+# ---------------------------------------------------------------------------
+
+def _one_host_outage_scenario(ckpt=INF, fail_at=100.0, repair_after=400.0,
+                              task_mi=300_000.0, federation=False, n_dc=1,
+                              deadline=3.0e38):
+    """One 1-core host (+ optional empty peer DC), one VM, one cloudlet."""
+    hosts = scenarios.uniform_hosts(n_dc, 1, cores=1, mips=1000.0,
+                                    ram_mb=1024.0, storage_mb=2_000_000.0)
+    vms = scenarios.uniform_vms(1, dc=0, ram_mb=512.0, storage_mb=1024.0,
+                                image_mb=1024.0)
+    cls = scenarios.make_cloudlets(np.array([0]), np.array([task_mi]),
+                                   np.zeros(1), input_mb=0.0, output_mb=0.0,
+                                   deadline=deadline)
+    out = workload.no_outages(n_dc, 1, 1)
+    out = out.replace(
+        fail_t=out.fail_t.at[0, 0, 0].set(fail_at),
+        repair_t=out.repair_t.at[0, 0, 0].set(fail_at + repair_after))
+    pol = scenarios.make_policy(
+        core_reserving=True, federation=federation, ckpt_interval=ckpt,
+        migration_fixed_s=30.0, interdc_bw_mbps=100.0, horizon=50_000.0)
+    return scenarios.Scenario(
+        hosts=hosts, vms=vms, cloudlets=cls,
+        market=scenarios.uniform_market(n_dc), policy=pol, outages=out,
+        max_steps=200)
+
+
+def test_restart_from_zero_rollback():
+    """ckpt = INF: the outage costs fail_at seconds of work + the outage."""
+    scn = _one_host_outage_scenario(ckpt=INF)
+    res = jax.jit(simulate)(scn)
+    # 100s done and lost; host back at 500; full 300s re-run -> 800
+    assert int(res.n_finished) == 1
+    np.testing.assert_allclose(float(res.finish_t[0]), 800.0, atol=0.5)
+    np.testing.assert_allclose(float(res.downtime), 400.0, atol=0.5)
+    assert int(res.n_evacuations) == 0
+    assert not bool(res.vm_failed[0])
+
+
+def test_checkpoint_rollback_keeps_completed_intervals():
+    """ckpt = 30k MI: only work past the last checkpoint is re-done."""
+    scn = _one_host_outage_scenario(ckpt=30_000.0)
+    res = jax.jit(simulate)(scn)
+    # 100s = 100k MI done; kept floor(100k/30k)*30k = 90k; resume at 500
+    # with 210k MI left -> finish at 710
+    np.testing.assert_allclose(float(res.finish_t[0]), 710.0, atol=0.5)
+
+
+def test_requeue_prefers_federation_peer():
+    """With an empty peer DC, the evicted VM re-places immediately there —
+    downtime is just the recovery transfer, not the outage."""
+    scn = _one_host_outage_scenario(ckpt=INF, federation=True, n_dc=2)
+    res = jax.jit(simulate)(scn)
+    transfer = 30.0 + 1024.0 / 100.0                    # fixed + image/bw
+    np.testing.assert_allclose(float(res.downtime), transfer, atol=0.5)
+    # restart from zero on the peer right after the transfer
+    np.testing.assert_allclose(
+        float(res.finish_t[0]), 100.0 + transfer + 300.0, atol=0.5)
+    assert int(np.array(res.vm_dc)[0]) == 1
+    assert int(res.n_migrations) == 1
+
+
+def test_sla_violation_accounting():
+    """Deadlines on both sides of the failure-stretched finish time."""
+    hit = jax.jit(simulate)(_one_host_outage_scenario(deadline=900.0))
+    miss = jax.jit(simulate)(_one_host_outage_scenario(deadline=700.0))
+    assert int(hit.sla_violations) == 0
+    assert int(miss.sla_violations) == 1
+    # an unfinished cloudlet with a real deadline also violates
+    never = _one_host_outage_scenario(deadline=700.0, repair_after=1e9)
+    res = jax.jit(simulate)(never.replace(
+        policy=never.policy.replace(horizon=jnp.float32(2000.0))))
+    assert int(res.n_finished) == 0
+    assert int(res.sla_violations) == 1
+
+
+def test_vm_failed_terminal_not_resurrected_by_repair():
+    """The satellite regression: a creation rejected outright (vm_failed)
+    stays dead across a repair that frees capacity; a failure-evicted VM
+    (vm_evicted) comes back.  The two states must never blur."""
+    hosts = scenarios.uniform_hosts(1, 1, cores=1, mips=1000.0,
+                                    ram_mb=1024.0, storage_mb=2_000_000.0)
+    # row A requests at 0 (placed, then evicted at 10); row B requests at 50
+    # mid-outage, nothing can host it anywhere -> terminal rejection
+    vms = scenarios.uniform_vms(2, dc=0, ram_mb=512.0, storage_mb=1024.0,
+                                request_t=np.array([0.0, 50.0]))
+    cls = scenarios.make_cloudlets(np.array([0, 1]),
+                                   np.array([100_000.0, 100_000.0]),
+                                   np.zeros(2), input_mb=0.0, output_mb=0.0)
+    out = workload.no_outages(1, 1, 1)
+    out = out.replace(fail_t=out.fail_t.at[0, 0, 0].set(10.0),
+                      repair_t=out.repair_t.at[0, 0, 0].set(100.0))
+    scn = scenarios.Scenario(
+        hosts=hosts, vms=vms, cloudlets=cls,
+        market=scenarios.uniform_market(1),
+        policy=scenarios.make_policy(core_reserving=True,
+                                     ckpt_interval=INF, horizon=50_000.0),
+        outages=out, max_steps=200)
+    res = jax.jit(simulate)(scn)
+    failed = np.array(res.vm_failed)
+    assert not failed[0], "evicted VM must recover, not terminally fail"
+    assert failed[1], "terminal creation rejection must survive the repair"
+    fin = np.array(res.finish_t)
+    assert fin[0] < 1e30, "recovered VM finishes its work"
+    assert fin[1] >= 1e30, "doomed cloudlet never runs"
+
+
+def test_mtbf_inf_matches_outage_free_program():
+    """An all-INF schedule is bit-identical to detaching outages entirely."""
+    scn = scenarios.reliability_scenario(None)
+    res_ctrl = jax.jit(simulate)(scn)
+    res_none = jax.jit(simulate)(scn.replace(outages=None, instruments=()))
+    for f in dataclasses.fields(res_ctrl):
+        np.testing.assert_array_equal(
+            np.array(getattr(res_ctrl, f.name)),
+            np.array(getattr(res_none, f.name)),
+            err_msg=f"SimResult.{f.name} diverged")
+    assert int(res_ctrl.n_evacuations) == 0
+    assert float(res_ctrl.downtime) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# proactive evacuation
+# ---------------------------------------------------------------------------
+
+def test_evacuation_beats_restart_from_zero():
+    """The acceptance demo: federation + finite ckpt, evacuation on vs the
+    restart-from-zero control — fewer violations, less downtime, same energy
+    order of magnitude, work finished either way."""
+    res_e = jax.jit(simulate)(scenarios.evacuation_scenario())
+    res_c = jax.jit(simulate)(scenarios.evacuation_scenario(
+        evacuation=False, ckpt_interval=INF))
+    assert int(res_e.n_finished) == 2 and int(res_c.n_finished) == 2
+    assert int(res_e.n_evacuations) == 2
+    assert int(res_c.n_evacuations) == 0
+    assert int(res_e.sla_violations) < int(res_c.sla_violations)
+    assert float(res_e.downtime) < float(res_c.downtime)
+    e_e = float(np.sum(np.array(res_e.energy_j)))
+    e_c = float(np.sum(np.array(res_c.energy_j)))
+    assert 0.1 < e_e / e_c < 10.0, "same energy order of magnitude"
+    # progress preservation: alarm at 250, ~40.24s stop-and-copy, 600s work
+    np.testing.assert_allclose(np.array(res_e.finish_t), 640.24, atol=0.5)
+    # restart control: eviction at 300, transfer, full 600s again
+    np.testing.assert_allclose(np.array(res_c.finish_t), 940.24, atol=0.5)
+
+
+def test_evacuation_noop_without_federation():
+    """The traced federation flag gates evacuation like every other
+    coordinator policy: flipped off, the same program restarts from zero."""
+    scn = scenarios.evacuation_scenario(ckpt_interval=INF)
+    scn = scn.replace(policy=scn.policy.replace(
+        federation=jnp.asarray(False)))
+    res = jax.jit(simulate)(scn)
+    assert int(res.n_evacuations) == 0
+    assert int(res.n_migrations) == 0
+    # no peer reachable: the work waits out the outage on the home host
+    assert float(res.downtime) > 1000.0
+
+
+# ---------------------------------------------------------------------------
+# campaign surface: vmapped grid == Python loop
+# ---------------------------------------------------------------------------
+
+def test_vmapped_mtbf_policy_grid_matches_loop():
+    """MTBF x (evacuation, ckpt) grid in one vmap row-matches per-scenario
+    runs bitwise — revocation does not break the campaign contract."""
+    template = scenarios.reliability_scenario(_mk())
+    K = 6
+    keys = jax.random.split(_mk(5), K)
+    mtbfs = jnp.asarray(
+        [300.0, 300.0, 900.0, 900.0, float(INF), float(INF)], jnp.float32)
+    evac = jnp.asarray([True, False, True, False, True, False])
+    ckpt = jnp.asarray(
+        [25_000.0, float(INF)] * 3, jnp.float32)
+    outs = jax.vmap(
+        lambda k, m: workload.host_outages(k, 2, 3, 2, m, 300.0)
+    )(keys, mtbfs)
+    pols = jax.vmap(
+        lambda e, c: template.policy.replace(evacuation=e, ckpt_interval=c)
+    )(evac, ckpt)
+    batched = broadcast_campaign(template, K, outages=outs, policy=pols)
+    res_v = run_campaign(batched)
+
+    checked = ("n_finished", "sla_violations", "downtime", "n_evacuations",
+               "n_migrations", "makespan", "total_cost", "finish_t")
+    for i in range(K):
+        row = template.replace(
+            policy=jax.tree.map(lambda x: x[i], pols),
+            outages=jax.tree.map(lambda x: x[i], outs))
+        res_i = jax.jit(simulate)(row)
+        for f in checked:
+            np.testing.assert_array_equal(
+                np.array(getattr(res_v, f)[i]),
+                np.array(getattr(res_i, f)),
+                err_msg=f"row {i}: SimResult.{f} diverged from the loop")
+    # the MTBF = INF rows are clean controls inside the same program
+    assert int(np.array(res_v.n_evacuations)[4]) == 0
+    assert float(np.array(res_v.downtime)[4]) == 0.0

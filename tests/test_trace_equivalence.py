@@ -91,6 +91,42 @@ def test_trace_matches_simulate_live_migration():
     _assert_results_identical(res, res_h)
 
 
+def test_trace_matches_simulate_with_failures():
+    """Host failures firing (DESIGN.md §9): revocation — eviction, rollback,
+    evacuation, downtime accrual — stays a pure engine semantic; the traced
+    and history drivers remain bit-identical to ``simulate``, SLA fields
+    included."""
+    from repro.core import simulate_history
+
+    for scn, want_evac in (
+        (scenarios.evacuation_scenario(), True),
+        (scenarios.evacuation_scenario(
+            evacuation=False, ckpt_interval=3.0e38), False),
+    ):
+        res = jax.jit(simulate)(scn)
+        if want_evac:
+            assert int(res.n_evacuations) == 2, "drain must actually happen"
+        else:
+            assert float(res.downtime) > 0, "failure must actually bite"
+        ts = jnp.asarray(np.arange(0.0, 1200.0, 77.0, dtype=np.float32))
+        res_t, prog = simulate_trace(scn, ts)
+        _assert_results_identical(res, res_t)
+        dprog = np.diff(np.array(prog), axis=0)
+        if want_evac:
+            # stop-and-copy preserves progress: monotone samples
+            assert (dprog >= -1e-5).all()
+        else:
+            # restart-from-zero is *visible* in the trace: progress drops
+            assert dprog.min() < -0.1
+        res_h, hist = jax.jit(simulate_history)(scn)
+        _assert_results_identical(res, res_h)
+        # the failure edge appears in the event log (the repair is scheduled
+        # past both runs' completion, so the loop never reaches it)
+        kinds = np.array(hist.kind)[np.array(hist.valid)]
+        from repro.core.step import K_FAILURE
+        assert (kinds == K_FAILURE).sum() == 1
+
+
 def test_trace_matches_simulate_randomized():
     """Property over random workloads: traced SimResult == untraced, all
     fields, across seeds x policy combos (no hypothesis dependency)."""
