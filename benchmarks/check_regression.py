@@ -2,15 +2,24 @@
 
     PYTHONPATH=src python -m benchmarks.check_regression \
         --baseline BENCH_baseline.json \
-        --fresh BENCH_engine.json BENCH_migration.json BENCH_reliability.json
+        --fresh BENCH_engine.json BENCH_event_engine.json \
+                BENCH_migration.json BENCH_reliability.json
 
 Merges the fresh reports (top-level sections are disjoint by construction:
-``benchmarks/engine_sweep.py``, ``benchmarks/live_migration.py`` and
-``benchmarks/reliability.py`` each own their sections) and compares the
-*jnp*-path throughput metrics against the committed ``BENCH_baseline.json``:
+``benchmarks/engine_sweep.py``, ``benchmarks/event_engine.py``,
+``benchmarks/live_migration.py`` and ``benchmarks/reliability.py`` each own
+their sections) and compares the *jnp*-path throughput metrics against the
+committed ``BENCH_baseline.json`` (refresh it only via
+``python -m benchmarks.run --refresh-baseline`` so every gated section
+updates together — see the baseline's ``_note`` key):
 
 * ``advance_sweep_kernel.jnp.cloudlets_per_s`` — raw fused-sweep throughput
 * ``engine_fig9_10.jnp.events_per_s``          — full-engine event rate
+* ``event_engine_single.jnp.events_per_s``     — provisioning-heavy event
+                                                 stream, one scenario
+* ``event_engine_batch.batch_major.batch_events_per_s`` — B=256 campaign
+                                                 through the batch-major
+                                                 step loop (DESIGN.md §10)
 * ``migration_sweep.jnp.scenarios_per_s``      — vmapped live-migration
                                                  threshold-grid campaign
 * ``reliability_sweep.jnp.scenarios_per_s``    — vmapped host-failure MTBF x
@@ -33,6 +42,8 @@ import sys
 GATED = (
     ("advance_sweep_kernel", "jnp", "cloudlets_per_s"),
     ("engine_fig9_10", "jnp", "events_per_s"),
+    ("event_engine_single", "jnp", "events_per_s"),
+    ("event_engine_batch", "batch_major", "batch_events_per_s"),
     ("migration_sweep", "jnp", "scenarios_per_s"),
     ("reliability_sweep", "jnp", "scenarios_per_s"),
 )
@@ -69,7 +80,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--baseline", default="BENCH_baseline.json")
     ap.add_argument("--fresh", nargs="+",
-                    default=["BENCH_engine.json", "BENCH_migration.json",
+                    default=["BENCH_engine.json", "BENCH_event_engine.json",
+                             "BENCH_migration.json",
                              "BENCH_reliability.json"],
                     help="fresh report(s); top-level sections are merged")
     ap.add_argument("--tol", type=float, default=0.5,

@@ -28,6 +28,8 @@ from repro.core.entities import (
 from repro.core.engine import (
     History,
     init_state,
+    is_batched,
+    scenario_row,
     simulate,
     simulate_history,
     simulate_instrumented,
@@ -66,7 +68,7 @@ __all__ = [
     "AutoscaleInstrument", "History", "Instrument", "MigrationInstrument",
     "ReliabilityInstrument",
     "StepEvent", "TraceInstrument", "UtilizationTimelineInstrument",
-    "init_state", "event_step",
+    "init_state", "event_step", "is_batched", "scenario_row",
     "simulate", "simulate_history", "simulate_instrumented", "simulate_trace",
     "broadcast_campaign", "run_campaign", "run_campaign_sharded",
     "stack_scenarios",

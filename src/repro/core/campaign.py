@@ -3,7 +3,9 @@
 What cloud researchers actually run with CloudSim is not one simulation but
 *sweeps* — policy x seed x workload grids.  Because the engine is a pure
 function with traced policy/workload values and static shapes, a campaign is
-``vmap(simulate)``; on a mesh it becomes ``shard_map`` over the data axis so a
+``simulate`` on the stacked scenario pytree — the batch-major step loop
+advances every row natively, with batch-global phase skipping and early-exit
+masking (DESIGN.md §10); on a mesh it becomes ``shard_map`` over the data axis so a
 256-chip pod evaluates 256+ federated-cloud scenarios concurrently.  This is
 the paper's "repeatable, controllable, free-of-cost" experimentation scaled
 three orders of magnitude (DESIGN.md §2, §5).
@@ -95,7 +97,11 @@ def broadcast_campaign(template: Scenario, n: int, **overrides) -> Scenario:
     return batched.replace(**overrides)
 
 
-_run_whole = jax.jit(jax.vmap(simulate))
+# `simulate` detects the stacked campaign axis by rank and runs the
+# batch-major step loop (engine.is_batched): the campaign dimension lives
+# inside the compiled program, not in an outer vmap, so the expensive event
+# phases skip on batch-global predicates (DESIGN.md §10).
+_run_whole = jax.jit(simulate)
 
 
 # --------------------------------------------------------------------------
@@ -117,7 +123,7 @@ def _donate_mask(treedef, avals: tuple) -> tuple[bool, ...]:
     chunk = jax.tree.unflatten(
         treedef, [jax.ShapeDtypeStruct(s, d) for s, d in avals]
     )
-    out = jax.eval_shape(jax.vmap(simulate), chunk)
+    out = jax.eval_shape(simulate, chunk)
     budget: dict = {}
     for leaf in jax.tree.leaves(out):
         key = (leaf.shape, leaf.dtype)
@@ -135,7 +141,7 @@ def _donate_mask(treedef, avals: tuple) -> tuple[bool, ...]:
 def _run_chunk_split(donated, kept, mask, treedef):
     it_d, it_k = iter(donated), iter(kept)
     leaves = [next(it_d) if m else next(it_k) for m in mask]
-    return jax.vmap(simulate)(jax.tree.unflatten(treedef, leaves))
+    return simulate(jax.tree.unflatten(treedef, leaves))
 
 
 def _run_chunk(chunk: Scenario) -> SimResult:
@@ -193,7 +199,7 @@ def run_campaign_sharded(batched: Scenario, mesh, axis: str = "data") -> SimResu
     # while-loop carries mix varying (per-sim state) and unvarying (scalars
     # broadcast inside the loop) types, so replication checking is off (the
     # compat shim); correctness is per-shard independence, which
-    # vmap(simulate) guarantees
+    # the batch-major simulate guarantees
     @partial(
         _shard_map,
         mesh=mesh,
@@ -201,7 +207,7 @@ def run_campaign_sharded(batched: Scenario, mesh, axis: str = "data") -> SimResu
         out_specs=pspec,
     )
     def _run(shard: Scenario) -> SimResult:
-        return jax.vmap(simulate)(shard)
+        return simulate(shard)
 
     batched = jax.device_put(batched, sharding)
     return jax.jit(_run)(batched)

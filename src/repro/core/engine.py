@@ -101,13 +101,32 @@ def init_state(scn: Scenario) -> SimState:
     )
 
 
+def is_batched(scn: Scenario) -> bool:
+    """Batch-major detection by rank (DESIGN.md §10): ``hosts.cores`` is
+    ``[D, H]`` for one scenario, ``[B, D, H]`` for a stacked campaign.
+    Under ``jax.vmap`` the per-row view is rank-2 again, so
+    ``vmap(simulate)`` still composes with the single-scenario path — which
+    is what keeps it an honest baseline for the batch-major drivers."""
+    return jnp.ndim(scn.hosts.cores) == 3
+
+
+def scenario_row(scn: Scenario, i: int = 0) -> Scenario:
+    """One row of a stacked campaign (static fields pass through)."""
+    return jax.tree.map(lambda x: x[i], scn)
+
+
 def simulate_instrumented(
     scn: Scenario, extra_instruments: tuple = ()
 ) -> tuple[SimResult, dict]:
     """Run one simulation and collect instrument outputs (by instrument name).
 
     Instruments = step defaults + ``Scenario.instruments`` + ``extra_instruments``.
+    A stacked campaign (``is_batched``) routes through the batch-major step:
+    one compiled loop advances every row natively, finished rows frozen by
+    the live mask, per-row results bitwise those of the solo runs.
     """
+    if is_batched(scn):
+        return _simulate_instrumented_batch(scn, tuple(extra_instruments))
     ctx, aux0 = make_context(scn, tuple(extra_instruments))
     max_steps = step_mod.resolve_max_steps(scn, ctx.instruments)
 
@@ -122,8 +141,46 @@ def simulate_instrumented(
     return finalize_result(scn, st), step_mod.finalize_outputs(scn, st, ctx, aux)
 
 
+def _simulate_instrumented_batch(
+    scn_b: Scenario, extras: tuple
+) -> tuple[SimResult, dict]:
+    """Batch-major driver: ``while any(live)`` over ``batch_event_step``.
+
+    ``make_context`` / ``resolve_max_steps`` read only static shape and
+    instrument-structure information, so the row-0 view stands in for every
+    row (``stack_scenarios`` enforces static-field agreement).
+    """
+    scn0 = scenario_row(scn_b)
+    ctx, _ = make_context(scn0, extras)
+    max_steps = step_mod.resolve_max_steps(scn0, ctx.instruments)
+    st0 = jax.vmap(init_state)(scn_b)
+    aux0 = jax.vmap(lambda s: step_mod.init_aux(s, extras))(scn_b)
+
+    def cond(carry) -> Array:
+        return jnp.any(step_mod.batch_live(scn_b, carry[0], max_steps))
+
+    def body(carry):
+        carry, _, _ = step_mod.batch_event_step(
+            scn_b, carry, ctx, extras, max_steps
+        )
+        return carry
+
+    st, aux = jax.lax.while_loop(cond, body, (st0, aux0))
+    res = jax.vmap(finalize_result)(scn_b, st)
+    out = jax.vmap(
+        lambda s, f, a: step_mod.finalize_outputs_for(s, f, a, extras)
+    )(scn_b, st, aux)
+    return res, out
+
+
 def simulate(scn: Scenario) -> SimResult:
-    """Run one complete simulation; pure, jittable, vmappable."""
+    """Run one complete simulation; pure, jittable, vmappable.
+
+    A stacked campaign (leading scenario axis, see ``is_batched``) runs
+    batch-major: one compiled step advances every row, with early-exit
+    masking and batch-global phase skipping — same per-row results, bitwise
+    (DESIGN.md §10).
+    """
     res, _ = simulate_instrumented(scn)
     return res
 
@@ -170,10 +227,15 @@ def simulate_history(scn: Scenario) -> tuple[SimResult, History]:
     carry the final state unchanged and emit invalid rows, so the result is
     bit-identical to ``simulate`` while exposing the whole trajectory — the
     scenario-analysis surface (per-DC utilization/cost/energy timelines) the
-    while-loop drivers cannot produce.
+    while-loop drivers cannot produce.  A stacked campaign emits
+    ``[T, B, ...]`` records through the batch-major step (rows frozen once
+    finished, exactly like their solo logs).
     """
     from repro.core import energy as energy_mod
     from repro.core import policies
+
+    if is_batched(scn):
+        return _simulate_history_batch(scn)
 
     ctx, aux0 = make_context(scn)
     max_steps = step_mod.resolve_max_steps(scn, ctx.instruments)
@@ -207,3 +269,46 @@ def simulate_history(scn: Scenario) -> tuple[SimResult, History]:
         body, (init_state(scn), aux0), None, length=max_steps
     )
     return finalize_result(scn, st), hist
+
+
+def _simulate_history_batch(scn_b: Scenario) -> tuple[SimResult, History]:
+    """Batch-major history: fixed-length scan over ``batch_event_step``;
+    ``History`` leaves get a ``[T, B, ...]`` layout."""
+    from repro.core import energy as energy_mod
+    from repro.core import policies
+
+    scn0 = scenario_row(scn_b)
+    ctx, _ = make_context(scn0)
+    max_steps = step_mod.resolve_max_steps(scn0, ctx.instruments)
+    st0 = jax.vmap(init_state)(scn_b)
+    aux0 = jax.vmap(step_mod.init_aux)(scn_b)
+    i32 = jnp.int32
+
+    def body(carry, _):
+        carry, ev, live = step_mod.batch_event_step(
+            scn_b, carry, ctx, (), max_steps
+        )
+        st2 = carry[0]
+
+        def record(scn, st_r, ev_r, live_r):
+            util = energy_mod.dc_utilization(scn, st_r, vm_mips=ev_r.vm_mips)
+            n_fin = jnp.sum(
+                (policies.cloudlet_finished(st_r)
+                 & scn.cloudlets.exists).astype(i32)
+            )
+            return History(
+                t=jnp.where(live_r, ev_r.t1, 0.0),
+                dt=jnp.where(live_r, ev_r.dt, 0.0),
+                kind=jnp.where(live_r, ev_r.kind, -1),
+                valid=live_r,
+                n_finished=jnp.where(live_r, n_fin, 0),
+                utilization=jnp.where(live_r, util, 0.0),
+                cpu_cost=jnp.where(live_r, st_r.cpu_cost, 0.0),
+                bw_cost=jnp.where(live_r, st_r.bw_cost, 0.0),
+                energy_j=jnp.where(live_r, st_r.energy_j, 0.0),
+            )
+
+        return carry, jax.vmap(record)(scn_b, st2, ev, live)
+
+    (st, _), hist = jax.lax.scan(body, (st0, aux0), None, length=max_steps)
+    return jax.vmap(finalize_result)(scn_b, st), hist

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 from jax import Array
 
@@ -685,6 +686,29 @@ class StepContext:
     advance: Callable = None
 
 
+def instruments_for(
+    scn: Scenario, extra_instruments: tuple = ()
+) -> tuple[Instrument, ...]:
+    """The full instrument tuple a driver threads through the loop.
+
+    Order — defaults, then ``Scenario.instruments``, then driver extras — is
+    the accrual order inside each step.  The batch-major step rebuilds this
+    inside its vmapped phase closures, so per-row instrument leaves (a
+    campaign sweeping instrument fields) map correctly while driver extras
+    stay captured unbatched.
+    """
+    return default_instruments() + tuple(scn.instruments) + tuple(
+        extra_instruments
+    )
+
+
+def init_aux(scn: Scenario, extra_instruments: tuple = ()) -> tuple:
+    """Initial instrument aux states (vmapped per row by the batch drivers)."""
+    return tuple(
+        ins.init(scn) for ins in instruments_for(scn, extra_instruments)
+    )
+
+
 def make_context(
     scn: Scenario, extra_instruments: tuple = ()
 ) -> tuple[StepContext, tuple]:
@@ -693,9 +717,7 @@ def make_context(
     Instrument order — defaults, then ``Scenario.instruments``, then driver
     extras — is the accrual order inside each step.
     """
-    instruments = default_instruments() + tuple(scn.instruments) + tuple(
-        extra_instruments
-    )
+    instruments = instruments_for(scn, extra_instruments)
     names = [ins.name for ins in instruments]
     dupes = {n for n in names if names.count(n) > 1}
     if dupes:
@@ -711,19 +733,45 @@ def make_context(
     return ctx, aux
 
 
-def event_step(
-    scn: Scenario, carry: tuple[SimState, tuple], ctx: StepContext
-) -> tuple[tuple[SimState, tuple], StepEvent]:
-    """Advance the world by one event batch.  THE event-loop body.
+# ---------------------------------------------------------------------------
+# the event-step phases (DESIGN.md §10)
+#
+# ``event_step`` is decomposed into phase functions so the batch-major step
+# can vmap each phase over the scenario axis while keeping the expensive
+# phases (the provisioning scan, broker dispatch) behind *scalar*
+# ``lax.cond``s on batch-global predicates.  Under vmap a batched-predicate
+# cond degrades to a select (both branches execute); a scalar predicate on
+# the whole batch genuinely skips the phase — the structural advantage the
+# batch-major path has over vmap-of-``simulate``.  Each skipped phase is an
+# exact identity whenever its predicate is False (every write inside is
+# gated by the same ``due`` mask the predicate reduces), so skipping
+# preserves bitwise identity.
+# ---------------------------------------------------------------------------
 
-    ``carry`` is ``(SimState, instrument aux tuple)``; returns the stepped
-    carry plus the emitted ``StepEvent``.  Pure, jittable, vmappable; every
-    driver — while_loop or scan — wraps exactly this function.
-    """
-    st, aux = carry
-    pol, cls, vms = scn.policy, scn.cloudlets, scn.vms
-    instruments = ctx.instruments
 
+def _provision_needed(scn: Scenario, st: SimState) -> Array:
+    """Any due, unplaced, unfailed VM request (the exact ``due`` mask of
+    ``provision.provision_due_vms``) — includes failure-evicted rows, which
+    retry at every event."""
+    vms = scn.vms
+    due = (
+        vms.exists & ~st.vm_placed & ~st.vm_failed
+        & (vms.request_t <= st.t) & (~vms.pool | st.pool_active)
+    )
+    return jnp.any(due)
+
+
+def _dispatch_needed(scn: Scenario, st: SimState) -> Array:
+    """Any submitted service-routed cloudlet still unbound (the exact ``due``
+    mask of ``provision.dispatch_cloudlets``)."""
+    cls = scn.cloudlets
+    return jnp.any(cls.exists & (st.cl_vm < 0) & (cls.submit_t <= st.t))
+
+
+def _phase_prologue(
+    scn: Scenario, st: SimState, aux: tuple, instruments: tuple
+) -> tuple[SimState, tuple]:
+    """Outage edges, instrument ``pre`` hooks, release of drained VMs."""
     # --- host failure/repair edges (Scenario.outages), before anything may
     #     observe or use the dead hosts: evict residents, roll back work ---
     st = provision.apply_outages(scn, st)
@@ -733,12 +781,29 @@ def event_step(
     for i, ins in enumerate(instruments):
         st, aux[i] = ins.pre(scn, st, aux[i])
 
-    # --- VM lifecycle: destroy-drained, then place due requests ---
+    # --- VM lifecycle: destroy drained VMs (placement happens next phase) ---
     st = provision.release_done_vms(scn, st)
-    st, _ = provision.provision_due_vms(scn, st)
+    return st, tuple(aux)
 
-    # --- broker dispatch: bind due service-routed cloudlets (vm == -1) ---
-    st = provision.dispatch_cloudlets(scn, st)
+
+def _cand_kinds(scn: Scenario, instruments: tuple) -> Array:
+    """Static event-kind classification aligned with ``_phase_bound``'s
+    candidate times (same per scenario row — shapes and instrument tuples
+    are static across a campaign)."""
+    cand_k = [K_READY, K_READY, K_VM_REQUEST, K_MIGRATION]
+    if scn.outages is not None:
+        cand_k += [K_FAILURE, K_REPAIR]
+    cand_k += [ins.bound_kind for ins in instruments]
+    cand_k.append(K_HORIZON)
+    return jnp.asarray(cand_k, jnp.int32)
+
+
+def _phase_bound(
+    scn: Scenario, st: SimState, aux: tuple, instruments: tuple
+) -> tuple[Array, Array, Array, Array, Array]:
+    """Policy sweep + next-event bound: (rate, vm_mips, active, bound_dt,
+    cand_ts)."""
+    pol, cls, vms = scn.policy, scn.cloudlets, scn.vms
 
     # --- the updateVMsProcessing sweep: rates for every task unit ---
     rate, vm_mips = policies.cloudlet_rates(scn, st)
@@ -760,26 +825,35 @@ def event_step(
         _min_where(vms.request_t, unplaced),
         _min_where(st.vm_avail_t, migrating),
     ]
-    cand_k = [K_READY, K_READY, K_VM_REQUEST, K_MIGRATION]
     if scn.outages is not None:
         ex = scn.hosts.exists
         cand_t.append(jnp.min(jnp.where(
             ex, scn.outages.next_fail_after(st.t), INF)))
-        cand_k.append(K_FAILURE)
         cand_t.append(jnp.min(jnp.where(
             ex, scn.outages.next_repair_after(st.t), INF)))
-        cand_k.append(K_REPAIR)
     for i, ins in enumerate(instruments):
         cand_t.append(ins.bound(scn, st, aux[i]))
-        cand_k.append(ins.bound_kind)
     cand_t.append(pol.horizon)
-    cand_k.append(K_HORIZON)
     cand_ts = jnp.stack(cand_t)
     bound_t = jnp.min(cand_ts)
     bound_dt = jnp.maximum(bound_t - st.t, 0.0)
+    return rate, vm_mips, active, bound_dt, cand_ts
 
-    # --- fused advance: completion min-reduce + work depletion ---
-    dt, new_rem = ctx.advance(st.rem_mi, rate, active, bound_dt)
+
+def _phase_commit(
+    scn: Scenario,
+    st: SimState,
+    aux: tuple,
+    instruments: tuple,
+    rate: Array,
+    vm_mips: Array,
+    active: Array,
+    cand_ts: Array,
+    dt: Array,
+    new_rem: Array,
+) -> tuple[tuple[SimState, tuple], StepEvent]:
+    """State update after the advance sweep + instrument ``post`` hooks."""
+    cls = scn.cloudlets
     t_next = st.t + dt
 
     newly_started = active & ~st.started
@@ -789,7 +863,7 @@ def event_step(
     kind = jnp.where(
         jnp.any(newly_fin),
         K_COMPLETION,
-        jnp.asarray(cand_k, jnp.int32)[jnp.argmin(cand_ts)],
+        _cand_kinds(scn, instruments)[jnp.argmin(cand_ts)],
     )
     ev = StepEvent(
         t0=st.t,
@@ -823,10 +897,182 @@ def event_step(
         )
 
     # --- instrument post hooks (market, energy, observers) ---
+    aux = list(aux)
     for i, ins in enumerate(instruments):
         st, aux[i] = ins.post(scn, st, ev, aux[i])
 
     return (st, tuple(aux)), ev
+
+
+def event_step(
+    scn: Scenario, carry: tuple[SimState, tuple], ctx: StepContext
+) -> tuple[tuple[SimState, tuple], StepEvent]:
+    """Advance the world by one event batch.  THE event-loop body.
+
+    ``carry`` is ``(SimState, instrument aux tuple)``; returns the stepped
+    carry plus the emitted ``StepEvent``.  Pure, jittable, vmappable; every
+    driver — while_loop or scan — wraps exactly this function (the
+    batch-major drivers wrap ``batch_event_step``, which composes the same
+    phases over a ``[B, ...]`` scenario axis).
+
+    The provisioning scan and broker dispatch sit behind scalar
+    ``lax.cond``s: most events have no due VM request and no unbound
+    cloudlet, and both phases are exact identities then, so skipping them is
+    free throughput at bitwise-identical results.  (Under vmap the conds
+    lower to selects — both branches run — which is exactly the pre-refactor
+    cost; the batch-major path keeps the predicates batch-global and scalar,
+    so *it* genuinely skips.)
+    """
+    st, aux = carry
+    instruments = ctx.instruments
+
+    st, aux = _phase_prologue(scn, st, aux, instruments)
+
+    # --- VM placement + broker dispatch, skipped when nothing is due ---
+    st = jax.lax.cond(
+        _provision_needed(scn, st),
+        lambda s: provision.provision_due_vms(scn, s)[0],
+        lambda s: s,
+        st,
+    )
+    st = jax.lax.cond(
+        _dispatch_needed(scn, st),
+        lambda s: provision.dispatch_cloudlets(scn, s),
+        lambda s: s,
+        st,
+    )
+
+    rate, vm_mips, active, bound_dt, cand_ts = _phase_bound(
+        scn, st, aux, instruments
+    )
+
+    # --- fused advance: completion min-reduce + work depletion ---
+    dt, new_rem = ctx.advance(st.rem_mi, rate, active, bound_dt)
+
+    return _phase_commit(
+        scn, st, aux, instruments, rate, vm_mips, active, cand_ts, dt, new_rem
+    )
+
+
+# ---------------------------------------------------------------------------
+# batch-major step: the campaign dimension inside the program (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def batch_live(scn_b: Scenario, st_b: SimState, max_steps: int) -> Array:
+    """[B] per-row loop-continuation mask — ``step_cond`` vmapped over the
+    scenario axis.  The batch drivers' loop condition is ``any(live)``."""
+    return jax.vmap(lambda scn, st: step_cond(scn, st, max_steps))(
+        scn_b, st_b
+    )
+
+
+def _freeze(live: Array, new, old):
+    """Per-leaf row select: live rows take the stepped value, finished rows
+    stay bitwise frozen at their final state (early-exit masking)."""
+    return jax.tree.map(
+        lambda a, b: jnp.where(
+            live.reshape(live.shape + (1,) * (a.ndim - 1)), a, b
+        ),
+        new,
+        old,
+    )
+
+
+def batch_event_step(
+    scn_b: Scenario,
+    carry: tuple[SimState, tuple],
+    ctx: StepContext,
+    extra_instruments: tuple,
+    max_steps: int,
+) -> tuple[tuple[SimState, tuple], StepEvent, Array]:
+    """Advance a ``[B, ...]`` batch of scenarios by one event batch each.
+
+    The same phases as ``event_step``, vmapped over the scenario axis, with
+    three batch-major specifics:
+
+    * **phase skipping** — the provisioning scan and broker dispatch run
+      under *scalar* ``lax.cond``s on batch-global predicates
+      (``any(needed & live)``), so an event where no live row has work for
+      the phase skips it for the whole batch — the cost structure
+      vmap-of-``simulate`` cannot express (its conds lower to selects).
+    * **batch-grid advance** — the advance sweep is called *outside* the
+      vmapped phases on the full ``[B, C]`` block, so ``sweep_impl="pallas"``
+      lands on the fused batch-grid kernel (one grid step per scenario row).
+    * **early-exit masking** — rows whose ``step_cond`` is already False are
+      frozen: every state/aux write is row-gated by ``live``, so a finished
+      scenario's trajectory is bitwise that of its solo run no matter how
+      long the batch keeps looping.
+
+    Instruments are rebuilt per row inside the vmapped closures
+    (``instruments_for``), so batched ``Scenario.instruments`` leaves map
+    per-row while driver ``extra_instruments`` stay captured unbatched.
+    Returns ``(carry', event batch, live)`` — dead rows' event fields are
+    garbage and must be masked with ``live`` by observers.
+    """
+    st_b, aux_b = carry
+    extras = tuple(extra_instruments)
+    live = batch_live(scn_b, st_b, max_steps)
+
+    def prologue(scn, st, aux):
+        return _phase_prologue(scn, st, aux, instruments_for(scn, extras))
+
+    st1, aux1 = jax.vmap(prologue)(scn_b, st_b, aux_b)
+
+    # --- VM placement + broker dispatch: batch-global skip predicates ---
+    need_prov = jnp.any(jax.vmap(_provision_needed)(scn_b, st1) & live)
+    st2 = jax.lax.cond(
+        need_prov,
+        lambda s: jax.vmap(
+            lambda scn, st: provision.provision_due_vms(scn, st)[0]
+        )(scn_b, s),
+        lambda s: s,
+        st1,
+    )
+    need_disp = jnp.any(jax.vmap(_dispatch_needed)(scn_b, st2) & live)
+    st3 = jax.lax.cond(
+        need_disp,
+        lambda s: jax.vmap(provision.dispatch_cloudlets)(scn_b, s),
+        lambda s: s,
+        st2,
+    )
+
+    def bound(scn, st, aux):
+        return _phase_bound(scn, st, aux, instruments_for(scn, extras))
+
+    rate, vm_mips, active, bound_dt, cand_ts = jax.vmap(bound)(
+        scn_b, st3, aux1
+    )
+
+    # --- batch-grid advance on the whole [B, C] block (outside the vmap) ---
+    dt, new_rem = ctx.advance(st3.rem_mi, rate, active, bound_dt)
+
+    def commit(scn, st, aux, rate, vm_mips, active, cand_ts, dt, new_rem):
+        return _phase_commit(
+            scn, st, aux, instruments_for(scn, extras),
+            rate, vm_mips, active, cand_ts, dt, new_rem,
+        )
+
+    (st4, aux2), ev = jax.vmap(commit)(
+        scn_b, st3, aux1, rate, vm_mips, active, cand_ts, dt, new_rem
+    )
+
+    carry2 = _freeze(live, (st4, aux2), (st_b, aux_b))
+    return carry2, ev, live
+
+
+def finalize_outputs_for(
+    scn: Scenario, st: SimState, aux: tuple, extra_instruments: tuple = ()
+) -> dict:
+    """Collect instrument outputs keyed by name, rebuilding the instrument
+    tuple from the (per-row) scenario — the batch drivers' vmapped twin of
+    ``finalize_outputs``."""
+    out: dict = {}
+    for ins, a in zip(instruments_for(scn, extra_instruments), aux):
+        o = ins.finalize(scn, st, a)
+        if o:
+            out[ins.name] = o
+    return out
 
 
 def finalize_result(scn: Scenario, st: SimState) -> SimResult:

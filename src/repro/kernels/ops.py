@@ -23,17 +23,43 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+# Largest single tile the fused advance kernel keeps resident per scenario
+# row: 2**17 f32 elements x 4 streams = 2 MB, comfortably inside VMEM.  Rows
+# longer than this fall back to the per-row two-phase sub-grid.
+_MAX_BLOCK = 1 << 17
+
+
+def advance_block(n_cloudlets: int) -> int:
+    """Tile-size heuristic for the advance kernel: the next power of two
+    covering the row (floor 128 — the TPU lane width — so tiny Fig-9/10-scale
+    scenarios stop paying full-tile overhead), capped at ``_MAX_BLOCK``.
+    Whenever the cap is not hit the whole row fits one tile and the kernel
+    takes its fused single-pass path."""
+    block = 128
+    while block < n_cloudlets and block < _MAX_BLOCK:
+        block *= 2
+    return block
+
+
 def advance_sweep(rem: Array, rate: Array, active: Array, bound_dt: Array):
-    """Engine advance sweep — Pallas twin of ref.advance_sweep_ref."""
+    """Engine advance sweep — Pallas twin of ref.advance_sweep_ref.
+
+    Rank-polymorphic like the reference: ``[C]`` per-scenario rows or
+    batch-major ``[B, C]`` blocks (the kernel grids over scenario rows
+    either way; rank-1 is the B=1 degenerate case).
+    """
     return advance_sweep_pallas(
-        rem, rate, active, bound_dt, interpret=not _on_tpu()
+        rem, rate, active, bound_dt,
+        block=advance_block(rem.shape[-1]),
+        interpret=not _on_tpu(),
     )
 
 
 def resolve_advance(impl: str):
     """The single advance-sweep routing point (core.step.resolve_advance
     defers here): ``"jnp"`` -> the fusable reference, ``"pallas"`` -> the
-    two-phase Mosaic kernel (interpret mode off-TPU)."""
+    fused batch-grid Mosaic kernel (interpret mode off-TPU).  Both
+    implementations pick batch-major vs per-scenario by input rank."""
     if impl == "pallas":
         return advance_sweep
     if impl == "jnp":

@@ -21,10 +21,19 @@ INF = jnp.float32(3.0e38)
 def advance_sweep_ref(
     rem: Array, rate: Array, active: Array, bound_dt: Array
 ) -> tuple[Array, Array]:
-    """dt to next completion (capped by ``bound_dt``) + work depletion."""
+    """dt to next completion (capped by ``bound_dt``) + work depletion.
+
+    Rank-polymorphic over a leading scenario axis: ``[C]`` inputs with a
+    scalar bound reduce to a scalar ``dt``; batch-major ``[B, C]`` inputs
+    with a ``[B]`` bound reduce per row to ``dt [B]`` — bitwise the same
+    per-row math as ``vmap`` of the rank-1 form (the batch engine's
+    bit-identity contract, DESIGN.md §10).
+    """
     dt_fin = jnp.where(active & (rate > 0), rem / jnp.maximum(rate, 1e-30), INF)
-    dt = jnp.minimum(jnp.min(dt_fin, initial=INF), bound_dt)
-    new_rem = jnp.where(active, jnp.maximum(rem - rate * dt, 0.0), rem)
+    dt = jnp.minimum(jnp.min(dt_fin, axis=-1, initial=INF), bound_dt)
+    new_rem = jnp.where(
+        active, jnp.maximum(rem - rate * dt[..., None], 0.0), rem
+    )
     return dt, new_rem
 
 

@@ -1,17 +1,27 @@
 """Pallas TPU kernel for the simulator's advance sweep (``vm_update``).
 
-The hot loop of the tensorized CloudSim engine is, per event:
+The hot loop of the tensorized CloudSim engine is, per event and per
+scenario row:
 
     dt      = min( min_i  rem_i / rate_i  over active i,  bound )
     rem_i  -= rate_i * dt
 
-A naive implementation reads ``rem``/``rate`` twice from HBM (once for the
-min-reduce, once for the update).  On TPU the grid is executed sequentially,
-so we fuse both passes into ONE kernel with a two-phase grid
-``(2, num_blocks)``: phase 0 accumulates the global min into SMEM scratch,
-phase 1 re-streams the blocks and applies the depletion.  VMEM tiles of
-``block`` cloudlets keep the working set on-chip; the only cross-block value
-is one f32 scalar in SMEM.
+The batch-major engine (core/step.py) calls this on a ``[B, C]`` block —
+one row per live scenario — so the kernel is a **batch grid**: grid step
+``b`` (``pl.program_id(0)``) owns scenario row ``b`` with the whole cloudlet
+tile resident in VMEM, computes the row's min-reduction AND applies the
+depletion in one pass, and emits the row's ``dt`` into an SMEM vector.
+Fusing the two phases removes the reduce/re-stream round trip that made the
+old two-phase kernel lose to jnp: each element is read exactly once.
+
+Rows longer than one tile fall back to a per-row two-phase sub-grid
+``(B, 2, nb)`` (phase 0 min-reduces across the row's ``nb`` tiles into SMEM
+scratch, phase 1 re-streams and applies) — same math, one extra pass, only
+ever taken when a row exceeds the resolver's tile cap (kernels/ops.py picks
+the tile: next-pow2 of the row length, floor 128, capped).
+
+Rank-1 inputs (a single scenario) are the degenerate ``B=1`` batch and
+return scalars, so one kernel serves both engine paths.
 
 Adaptation note (DESIGN.md §2): CloudSim walks Java object lists here; the
 TPU-native form is this dense masked sweep — entity count scales with VMEM
@@ -27,29 +37,43 @@ from jax import Array
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-_NEG = -1.0e30
 _INF = 3.0e38
 
 
-def _sweep_kernel(rem_ref, rate_ref, active_ref, bound_ref,
+def _fused_kernel(rem_ref, rate_ref, active_ref, bound_ref,
+                  dt_ref, out_ref):
+    """One grid step == one scenario row, whole cloudlet tile resident."""
+    b = pl.program_id(0)
+    rem = rem_ref[...]
+    rate = rate_ref[...]
+    act = active_ref[...] > 0.5
+    per = jnp.where(act & (rate > 0), rem / jnp.maximum(rate, 1e-30), _INF)
+    dt = jnp.minimum(jnp.min(per), bound_ref[b])
+    out_ref[...] = jnp.where(act, jnp.maximum(rem - rate * dt, 0.0), rem)
+    dt_ref[b] = dt
+
+
+def _tiled_kernel(rem_ref, rate_ref, active_ref, bound_ref,
                   dt_ref, out_ref, min_sc):
-    phase = pl.program_id(0)
-    j = pl.program_id(1)
-    nb = pl.num_programs(1)
+    """Fallback for rows longer than one tile: per-row two-phase sweep."""
+    b = pl.program_id(0)
+    phase = pl.program_id(1)
+    j = pl.program_id(2)
+    nb = pl.num_programs(2)
 
     @pl.when((phase == 0) & (j == 0))
     def _init():
-        min_sc[0] = bound_ref[0]
+        min_sc[0] = bound_ref[b]
 
     @pl.when(phase == 0)
     def _reduce():
         rem = rem_ref[...]
         rate = rate_ref[...]
         act = active_ref[...] > 0.5
-        dt_block = jnp.where(
+        per = jnp.where(
             act & (rate > 0), rem / jnp.maximum(rate, 1e-30), _INF
         )
-        min_sc[0] = jnp.minimum(min_sc[0], jnp.min(dt_block))
+        min_sc[0] = jnp.minimum(min_sc[0], jnp.min(per))
 
     @pl.when(phase == 1)
     def _apply():
@@ -63,7 +87,7 @@ def _sweep_kernel(rem_ref, rate_ref, active_ref, bound_ref,
 
         @pl.when(j == nb - 1)
         def _emit():
-            dt_ref[0] = dt
+            dt_ref[b] = dt
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
@@ -76,33 +100,57 @@ def advance_sweep_pallas(
     block: int = 1024,
     interpret: bool = True,
 ) -> tuple[Array, Array]:
-    """Fused min-reduce + depletion. Shapes: rem/rate/active [C] -> (dt, rem')."""
-    (c,) = rem.shape
-    pad = (-c) % block
-    remp = jnp.pad(rem.astype(jnp.float32), (0, pad))
-    ratep = jnp.pad(rate.astype(jnp.float32), (0, pad))
-    actp = jnp.pad(active.astype(jnp.float32), (0, pad))  # pad rows inactive
-    nb = (c + pad) // block
-    bound = jnp.reshape(bound_dt.astype(jnp.float32), (1,))
+    """Fused min-reduce + depletion.
 
-    dt, new_rem = pl.pallas_call(
-        _sweep_kernel,
-        grid=(2, nb),
-        in_specs=[
-            pl.BlockSpec((block,), lambda p, j: (j,)),
-            pl.BlockSpec((block,), lambda p, j: (j,)),
-            pl.BlockSpec((block,), lambda p, j: (j,)),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-        ],
-        out_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((block,), lambda p, j: (j,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((1,), jnp.float32),
-            jax.ShapeDtypeStruct((c + pad,), jnp.float32),
-        ],
-        scratch_shapes=[pltpu.SMEM((1,), jnp.float32)],
-        interpret=interpret,
-    )(remp, ratep, actp, bound)
-    return dt[0], new_rem[:c].astype(rem.dtype)
+    Batch-major: rem/rate/active ``[B, C]``, bound_dt ``[B]`` ->
+    ``(dt [B], rem' [B, C])``.  Rank-1 ``[C]`` inputs with a scalar bound are
+    the ``B=1`` special case and return ``(dt scalar, rem' [C])``.
+    """
+    squeeze = rem.ndim == 1
+    out_dtype = rem.dtype
+    if squeeze:
+        rem, rate, active = rem[None, :], rate[None, :], active[None, :]
+    b, c = rem.shape
+    pad = (-c) % block
+    zpad = ((0, 0), (0, pad))
+    remp = jnp.pad(rem.astype(jnp.float32), zpad)
+    ratep = jnp.pad(rate.astype(jnp.float32), zpad)
+    actp = jnp.pad(active.astype(jnp.float32), zpad)  # pad rows inactive
+    nb = (c + pad) // block
+    bound = jnp.reshape(bound_dt.astype(jnp.float32), (b,))
+
+    out_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),        # dt [B]
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b,), jnp.float32),
+        jax.ShapeDtypeStruct((b, c + pad), jnp.float32),
+    ]
+    if nb == 1:
+        # one resident tile per row: single-pass fused kernel
+        tile = pl.BlockSpec((1, block), lambda i: (i, 0))
+        dt, new_rem = pl.pallas_call(
+            _fused_kernel,
+            grid=(b,),
+            in_specs=[tile, tile, tile,
+                      pl.BlockSpec(memory_space=pltpu.SMEM)],
+            out_specs=out_specs + [tile],
+            out_shape=out_shape,
+            interpret=interpret,
+        )(remp, ratep, actp, bound)
+    else:
+        tile = pl.BlockSpec((1, block), lambda i, p, j: (i, j))
+        dt, new_rem = pl.pallas_call(
+            _tiled_kernel,
+            grid=(b, 2, nb),
+            in_specs=[tile, tile, tile,
+                      pl.BlockSpec(memory_space=pltpu.SMEM)],
+            out_specs=out_specs + [tile],
+            out_shape=out_shape,
+            scratch_shapes=[pltpu.SMEM((1,), jnp.float32)],
+            interpret=interpret,
+        )(remp, ratep, actp, bound)
+    new_rem = new_rem[:, :c].astype(out_dtype)
+    if squeeze:
+        return dt[0], new_rem[0]
+    return dt, new_rem
