@@ -31,7 +31,9 @@ so its wall time is a correctness seat, not a perf claim (DESIGN.md §4).
 The tolerance is deliberately generous (default: fail below 0.5x baseline)
 because shared CI runners are noisy — this catches "the hot path got 3x
 slower" regressions, not 10% wiggles.  Exit status is the contract: 0 ok,
-1 regression, 2 missing/contradictory inputs.
+1 regression, 2 missing/contradictory inputs.  Every gated key is evaluated
+before exiting — one missing benchmark section cannot mask regressions (or
+further missing keys) in the other five.
 """
 from __future__ import annotations
 
@@ -61,19 +63,28 @@ def _get(report: dict, path: tuple[str, ...], src: str) -> float:
     return value
 
 
-def check(baseline: dict, fresh: dict, tol: float) -> list[str]:
-    """Return a list of human-readable failures (empty = gate passes)."""
-    failures = []
+def check(baseline: dict, fresh: dict, tol: float) -> tuple[list[str], list[str]]:
+    """Evaluate every gated key independently; nothing short-circuits.
+
+    Returns ``(regressions, malformed)`` — each a list of human-readable
+    failure lines covering ALL failing keys, so one broken benchmark section
+    can't mask the report on the other five.
+    """
+    regressions, malformed = [], []
     for path in GATED:
-        base = _get(baseline, path, "baseline")
-        new = _get(fresh, path, "fresh")
+        try:
+            base = _get(baseline, path, "baseline")
+            new = _get(fresh, path, "fresh")
+        except (KeyError, ValueError) as e:
+            malformed.append(f"MALFORMED {e}")
+            continue
         ratio = new / base
         line = f"{'/'.join(path)}: {new:.6g} vs baseline {base:.6g} ({ratio:.2f}x)"
         if ratio < tol:
-            failures.append(f"REGRESSION {line} < {tol}x")
+            regressions.append(f"REGRESSION {line} < {tol}x")
         else:
             print(f"ok {line}")
-    return failures
+    return regressions, malformed
 
 
 def main(argv=None) -> int:
@@ -104,14 +115,14 @@ def main(argv=None) -> int:
         else:
             reports[name] = data
 
-    try:
-        failures = check(reports["baseline"], reports["fresh"], args.tol)
-    except (KeyError, ValueError) as e:
-        print(f"error: malformed report: {e}", file=sys.stderr)
-        return 2
-    for line in failures:
+    regressions, malformed = check(
+        reports["baseline"], reports["fresh"], args.tol
+    )
+    for line in regressions + malformed:
         print(line, file=sys.stderr)
-    return 1 if failures else 0
+    if malformed:
+        return 2
+    return 1 if regressions else 0
 
 
 if __name__ == "__main__":

@@ -5,7 +5,6 @@ Table-1 metrics respond.
     PYTHONPATH=src python examples/federated_cloud.py
 """
 import jax
-import numpy as np
 
 from repro.core import scenarios, simulate
 

@@ -9,7 +9,6 @@ runs on CPU, so the default step count keeps wall time reasonable — pass
 --steps 300 for the full demonstration.)
 """
 import argparse
-import dataclasses
 
 import numpy as np
 

@@ -1,4 +1,14 @@
-"""repro.analysis — roofline extraction from compiled dry-run artifacts."""
+"""repro.analysis — static analysis of compiled dry-run artifacts: roofline
+extraction (``roofline``) and the structural-invariant linter (``simlint``)."""
 from repro.analysis import roofline
 
-__all__ = ["roofline"]
+__all__ = ["roofline", "simlint"]
+
+
+def __getattr__(name):
+    # simlint imports jax at module load; keep it lazy so lightweight
+    # roofline-only consumers don't pay for it
+    if name == "simlint":
+        import importlib
+        return importlib.import_module("repro.analysis.simlint")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from functools import lru_cache
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
@@ -29,7 +28,13 @@ _COMP_HEADER = re.compile(r"^(ENTRY\s+)?(%?[\w\.\-]+)\s*\(.*->.*\{\s*$")
 _SHAPE = re.compile(r"\b(\w+)\[([\d,]*)\]")
 _WHILE = re.compile(r"while\(.*?\), condition=(%?[\w\.\-]+), body=(%?[\w\.\-]+)")
 _KNOWN_TRIPS = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
-_CALLS = re.compile(r"(?:calls|to_apply)=(%?[\w\.\-]+)")
+# ``true_computation=``/``false_computation=`` are the pred-typed conditional
+# form; the index-typed form lists its branches in ``branch_computations={}``
+# (parsed separately — a brace-delimited name list, not a single name).
+_CALLS = re.compile(
+    r"(?:calls|to_apply|true_computation|false_computation)=(%?[\w\.\-]+)"
+)
+_BRANCH_COMPS = re.compile(r"branch_computations=\{([^}]*)\}")
 _FUSION_CALLS = re.compile(r"fusion\(.*?calls=(%?[\w\.\-]+)", re.S)
 _COLL = re.compile(
     r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
@@ -253,6 +258,15 @@ class HloWalker:
                 tot.dot_flops += self._dot_flops(comp, line)
             for sub in _CALLS.findall(line):
                 tot.add(self.totals_for(sub, memo), 1.0)
+            # conditional branch bodies: every branch walked at weight 1 (a
+            # conservative upper bound — exactly one executes per visit), so
+            # dots/collectives inside a cond are trip-weighted by enclosing
+            # loops instead of silently skipped
+            for bm in _BRANCH_COMPS.finditer(line):
+                for name in bm.group(1).split(","):
+                    name = name.strip()
+                    if name:
+                        tot.add(self.totals_for(name, memo), 1.0)
         return tot
 
     def walk(self) -> WalkTotals:

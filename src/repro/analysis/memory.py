@@ -126,7 +126,6 @@ def estimate(model, cfg, shape, mesh, microbatches: int = 1,
         b_loc = max(shape.global_batch // dp, 1)
         act = b_loc * S * D * act_dt
         layers = cfg.n_layers + (cfg.encoder.n_layers if cfg.encoder else 0)
-        specs = model.input_specs(shape)
         cache_shapes = jax.eval_shape(
             lambda: model.init_caches(shape.global_batch, S)
         )

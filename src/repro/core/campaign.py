@@ -144,13 +144,33 @@ def _run_chunk_split(donated, kept, mask, treedef):
     return simulate(jax.tree.unflatten(treedef, leaves))
 
 
-def _run_chunk(chunk: Scenario) -> SimResult:
+def _split_chunk(chunk: Scenario):
+    """(donated leaves, kept leaves, mask, treedef) for the chunk runner."""
     leaves, treedef = jax.tree.flatten(chunk)
     avals = tuple((l.shape, l.dtype) for l in leaves)
     mask = _donate_mask(treedef, avals)
     donated = tuple(l for l, m in zip(leaves, mask) if m)
     kept = tuple(l for l, m in zip(leaves, mask) if not m)
+    return donated, kept, mask, treedef
+
+
+def _run_chunk(chunk: Scenario) -> SimResult:
+    donated, kept, mask, treedef = _split_chunk(chunk)
     return _run_chunk_split(donated, kept, mask, treedef)
+
+
+def lower_chunk(chunk: Scenario) -> tuple[str, int]:
+    """AOT-compile one campaign chunk through the donating runner and return
+    ``(optimized_hlo_text, n_donated)``.
+
+    The HLO module header carries XLA's ``input_output_alias`` table; simlint
+    rule R2 checks it covers every ``_donate_mask``-donatable leaf, catching
+    the PR-2 "donation that never aliased" regression class statically —
+    without running a campaign.
+    """
+    donated, kept, mask, treedef = _split_chunk(chunk)
+    compiled = _run_chunk_split.lower(donated, kept, mask, treedef).compile()
+    return compiled.as_text(), sum(mask)
 
 
 def run_campaign(

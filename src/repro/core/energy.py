@@ -13,7 +13,6 @@ pair-dependent, enabling locality-aware coordinator policies.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import Array

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax import Array
 
 from repro.core.entities import INF, Scenario, SimState
-from repro.core import policies, segments
+from repro.core import policies
 
 
 def _return_resources(scn: Scenario, state: SimState, newly: Array) -> SimState:

@@ -9,7 +9,7 @@ is a single dataflow program, so the scheduler overhead per entity is zero.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, TypeVar
+from typing import TypeVar
 
 import jax
 

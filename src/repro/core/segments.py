@@ -21,7 +21,6 @@ def segment_prefix_sum(values: Array, segment_ids: Array, num_segments: int) -> 
     ``segment_ids`` entries >= num_segments (or negative mapped there by the
     caller) contribute nothing and receive garbage prefixes — callers mask.
     """
-    n = values.shape[0]
     seg = jnp.clip(segment_ids, 0, num_segments)  # clip strays into a junk segment
     order = jnp.argsort(seg, stable=True)         # stable => row order inside segs
     v_sorted = values[order]

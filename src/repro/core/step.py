@@ -53,6 +53,15 @@ K_SCALE = 7        # an autoscaler evaluation tick (AutoscaleInstrument)
 K_FAILURE = 8      # a scheduled host failure (Scenario.outages)
 K_REPAIR = 9       # a failed host came back (empty)
 
+# Named scopes wrapping the phase-skip ``lax.cond``s.  The names land in the
+# optimized HLO's op metadata (``op_name=.../phase_provision/cond``), which is
+# how simlint rule R1 verifies the predicates survive XLA lowering as real
+# ``conditional`` ops with branch computations — not flattened into ``select``
+# (the vmap degradation that silently pays both branches, DESIGN.md §10/§11).
+SCOPE_PROVISION = "phase_provision"
+SCOPE_DISPATCH = "phase_dispatch"
+PHASE_SCOPES = (SCOPE_PROVISION, SCOPE_DISPATCH)
+
 
 def default_max_steps(scn: Scenario) -> int:
     """Safety bound on event batches: starts + finishes + VM lifecycle + slack.
@@ -929,18 +938,20 @@ def event_step(
     st, aux = _phase_prologue(scn, st, aux, instruments)
 
     # --- VM placement + broker dispatch, skipped when nothing is due ---
-    st = jax.lax.cond(
-        _provision_needed(scn, st),
-        lambda s: provision.provision_due_vms(scn, s)[0],
-        lambda s: s,
-        st,
-    )
-    st = jax.lax.cond(
-        _dispatch_needed(scn, st),
-        lambda s: provision.dispatch_cloudlets(scn, s),
-        lambda s: s,
-        st,
-    )
+    with jax.named_scope(SCOPE_PROVISION):
+        st = jax.lax.cond(
+            _provision_needed(scn, st),
+            lambda s: provision.provision_due_vms(scn, s)[0],
+            lambda s: s,
+            st,
+        )
+    with jax.named_scope(SCOPE_DISPATCH):
+        st = jax.lax.cond(
+            _dispatch_needed(scn, st),
+            lambda s: provision.dispatch_cloudlets(scn, s),
+            lambda s: s,
+            st,
+        )
 
     rate, vm_mips, active, bound_dt, cand_ts = _phase_bound(
         scn, st, aux, instruments
@@ -1021,21 +1032,23 @@ def batch_event_step(
 
     # --- VM placement + broker dispatch: batch-global skip predicates ---
     need_prov = jnp.any(jax.vmap(_provision_needed)(scn_b, st1) & live)
-    st2 = jax.lax.cond(
-        need_prov,
-        lambda s: jax.vmap(
-            lambda scn, st: provision.provision_due_vms(scn, st)[0]
-        )(scn_b, s),
-        lambda s: s,
-        st1,
-    )
+    with jax.named_scope(SCOPE_PROVISION):
+        st2 = jax.lax.cond(
+            need_prov,
+            lambda s: jax.vmap(
+                lambda scn, st: provision.provision_due_vms(scn, st)[0]
+            )(scn_b, s),
+            lambda s: s,
+            st1,
+        )
     need_disp = jnp.any(jax.vmap(_dispatch_needed)(scn_b, st2) & live)
-    st3 = jax.lax.cond(
-        need_disp,
-        lambda s: jax.vmap(provision.dispatch_cloudlets)(scn_b, s),
-        lambda s: s,
-        st2,
-    )
+    with jax.named_scope(SCOPE_DISPATCH):
+        st3 = jax.lax.cond(
+            need_disp,
+            lambda s: jax.vmap(provision.dispatch_cloudlets)(scn_b, s),
+            lambda s: s,
+            st2,
+        )
 
     def bound(scn, st, aux):
         return _phase_bound(scn, st, aux, instruments_for(scn, extras))

@@ -40,6 +40,35 @@ from jax.experimental.pallas import tpu as pltpu
 _INF = 3.0e38
 
 
+def kernel_plan(b: int, c: int, block: int) -> dict:
+    """Static launch geometry for ``advance_sweep_pallas`` — the single
+    source of truth for grid, tile and SMEM declarations.
+
+    ``advance_sweep_pallas`` builds its ``pallas_call`` from this plan, and
+    simlint rule R6 audits the same plan (block within the
+    ``ops.advance_block`` heuristic bounds, ``[B]`` SMEM operands scalar per
+    grid row) without instantiating the kernel — so the audited geometry can
+    never drift from the launched one.
+    """
+    pad = (-c) % block
+    nb = (c + pad) // block
+    plan = {
+        "b": b,
+        "c": c,
+        "block": block,
+        "padded_c": c + pad,
+        "nb": nb,
+        "variant": "fused" if nb == 1 else "two_phase",
+        "grid": (b,) if nb == 1 else (b, 2, nb),
+        "tile": (1, block),
+        # SMEM-resident [B] vectors: one scalar per grid row (program_id(0))
+        "smem_in": (("bound_dt", (b,)),),
+        "smem_out": (("dt", (b,)),),
+        "smem_scratch": () if nb == 1 else (("min_sc", (1,)),),
+    }
+    return plan
+
+
 def _fused_kernel(rem_ref, rate_ref, active_ref, bound_ref,
                   dt_ref, out_ref):
     """One grid step == one scenario row, whole cloudlet tile resident."""
@@ -111,27 +140,27 @@ def advance_sweep_pallas(
     if squeeze:
         rem, rate, active = rem[None, :], rate[None, :], active[None, :]
     b, c = rem.shape
-    pad = (-c) % block
+    plan = kernel_plan(b, c, block)
+    pad = plan["padded_c"] - c
     zpad = ((0, 0), (0, pad))
     remp = jnp.pad(rem.astype(jnp.float32), zpad)
     ratep = jnp.pad(rate.astype(jnp.float32), zpad)
     actp = jnp.pad(active.astype(jnp.float32), zpad)  # pad rows inactive
-    nb = (c + pad) // block
     bound = jnp.reshape(bound_dt.astype(jnp.float32), (b,))
 
     out_specs = [
         pl.BlockSpec(memory_space=pltpu.SMEM),        # dt [B]
     ]
     out_shape = [
-        jax.ShapeDtypeStruct((b,), jnp.float32),
-        jax.ShapeDtypeStruct((b, c + pad), jnp.float32),
+        jax.ShapeDtypeStruct(plan["smem_out"][0][1], jnp.float32),
+        jax.ShapeDtypeStruct((b, plan["padded_c"]), jnp.float32),
     ]
-    if nb == 1:
+    if plan["variant"] == "fused":
         # one resident tile per row: single-pass fused kernel
-        tile = pl.BlockSpec((1, block), lambda i: (i, 0))
+        tile = pl.BlockSpec(plan["tile"], lambda i: (i, 0))
         dt, new_rem = pl.pallas_call(
             _fused_kernel,
-            grid=(b,),
+            grid=plan["grid"],
             in_specs=[tile, tile, tile,
                       pl.BlockSpec(memory_space=pltpu.SMEM)],
             out_specs=out_specs + [tile],
@@ -139,15 +168,18 @@ def advance_sweep_pallas(
             interpret=interpret,
         )(remp, ratep, actp, bound)
     else:
-        tile = pl.BlockSpec((1, block), lambda i, p, j: (i, j))
+        tile = pl.BlockSpec(plan["tile"], lambda i, p, j: (i, j))
         dt, new_rem = pl.pallas_call(
             _tiled_kernel,
-            grid=(b, 2, nb),
+            grid=plan["grid"],
             in_specs=[tile, tile, tile,
                       pl.BlockSpec(memory_space=pltpu.SMEM)],
             out_specs=out_specs + [tile],
             out_shape=out_shape,
-            scratch_shapes=[pltpu.SMEM((1,), jnp.float32)],
+            scratch_shapes=[
+                pltpu.SMEM(shape, jnp.float32)
+                for _, shape in plan["smem_scratch"]
+            ],
             interpret=interpret,
         )(remp, ratep, actp, bound)
     new_rem = new_rem[:, :c].astype(out_dtype)

@@ -20,10 +20,8 @@ paper's "evaluate before deploying" loop, pointed at ourselves).
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
-import numpy as np
 
 from repro.ckpt import latest_step
 from repro.core import SPACE_SHARED, Scenario, scenarios as builders, simulate

@@ -12,8 +12,6 @@ preallocated cache.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax import Array
@@ -284,7 +282,6 @@ def _decode_flash_lsharded(cfg, mesh, rules, q, kT, vT, k_cache, v_cache,
     from repro.dist.compat import shard_map
 
     tp = rules.tp
-    ntp = mesh.shape[tp]
     B = q.shape[0]
     Hk, L = k_cache.shape[1], k_cache.shape[2]
     g = cfg.n_heads // Hk

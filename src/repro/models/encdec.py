@@ -11,8 +11,6 @@ per-layer cross K/V computed once at prefill.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax import Array

@@ -4,14 +4,12 @@ import os
 import subprocess
 import sys
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import (
     SPACE_SHARED,
-    TIME_SHARED,
     run_campaign,
     scenarios,
     simulate_trace,

@@ -1,0 +1,90 @@
+"""The bench-regression gate must report EVERY failing gated key, not stop
+at the first: a single missing benchmark section used to abort the whole
+check, masking real regressions in the other five sections."""
+import json
+
+import pytest
+
+from benchmarks import check_regression as cr
+
+pytestmark = pytest.mark.tier1
+
+
+def _report(scale=1.0, drop=(), **overrides):
+    """A synthetic report covering every gated key at ``100 * scale``."""
+    out: dict = {}
+    for section, impl, metric in cr.GATED:
+        if (section, impl, metric) in drop or section in drop:
+            continue
+        out.setdefault(section, {}).setdefault(impl, {})[metric] = (
+            overrides.get(section, 100.0 * scale)
+        )
+    return out
+
+
+class TestCheck:
+    def test_clean_pair_passes(self):
+        regs, bad = cr.check(_report(), _report(scale=0.9), tol=0.5)
+        assert regs == [] and bad == []
+
+    def test_all_regressions_reported(self):
+        # three sections regress below tol: all three lines must come back
+        fresh = _report(
+            engine_fig9_10=10.0, migration_sweep=20.0, reliability_sweep=5.0
+        )
+        regs, bad = cr.check(_report(), fresh, tol=0.5)
+        assert bad == []
+        assert len(regs) == 3
+        joined = "\n".join(regs)
+        for sect in ("engine_fig9_10", "migration_sweep", "reliability_sweep"):
+            assert sect in joined
+
+    def test_missing_key_does_not_mask_other_failures(self):
+        # one section missing AND another regressed: both must surface
+        fresh = _report(drop=("event_engine_single",), migration_sweep=1.0)
+        regs, bad = cr.check(_report(), fresh, tol=0.5)
+        assert len(bad) == 1 and "event_engine_single" in bad[0]
+        assert len(regs) == 1 and "migration_sweep" in regs[0]
+
+    def test_multiple_missing_keys_all_reported(self):
+        fresh = _report(drop=("engine_fig9_10", "reliability_sweep"))
+        regs, bad = cr.check(_report(), fresh, tol=0.5)
+        assert regs == []
+        assert len(bad) == 2
+
+    def test_non_positive_value_is_malformed(self):
+        regs, bad = cr.check(_report(), _report(engine_fig9_10=0.0), tol=0.5)
+        assert any("non-positive" in b for b in bad)
+
+
+class TestMainExitCodes:
+    def _write(self, tmp_path, name, data):
+        p = tmp_path / name
+        p.write_text(json.dumps(data))
+        return str(p)
+
+    def _run(self, tmp_path, baseline, fresh, tol="0.5"):
+        return cr.main([
+            "--baseline", self._write(tmp_path, "base.json", baseline),
+            "--fresh", self._write(tmp_path, "fresh.json", fresh),
+            "--tol", tol,
+        ])
+
+    def test_ok_exit_0(self, tmp_path):
+        assert self._run(tmp_path, _report(), _report()) == 0
+
+    def test_regression_exit_1(self, tmp_path):
+        assert self._run(tmp_path, _report(), _report(scale=0.1)) == 1
+
+    def test_missing_key_exit_2_even_with_regressions(self, tmp_path, capsys):
+        fresh = _report(drop=("advance_sweep_kernel",), migration_sweep=1.0)
+        assert self._run(tmp_path, _report(), fresh) == 2
+        err = capsys.readouterr().err
+        # the masking bug: the regression must still be printed
+        assert "migration_sweep" in err and "advance_sweep_kernel" in err
+
+    def test_unreadable_report_exit_2(self, tmp_path):
+        assert cr.main([
+            "--baseline", str(tmp_path / "nope.json"),
+            "--fresh", self._write(tmp_path, "fresh.json", _report()),
+        ]) == 2

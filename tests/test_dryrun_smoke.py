@@ -1,6 +1,5 @@
 """Multi-device correctness + dry-run smoke, via a 4-device subprocess
 (XLA_FLAGS must be set before jax init, so these run out of process)."""
-import json
 import os
 import subprocess
 import sys

@@ -64,7 +64,6 @@ def test_engine_invariants(seed, hp, vp):
     submit = np.array(scn.cloudlets.submit_t)
     length = np.array(scn.cloudlets.length_mi)
     vmips = np.array(scn.vms.mips)
-    hmips = float(scn.hosts.mips[0, 0])
 
     done = np.isfinite(fin) & (fin < 1e30)
     # every cloudlet whose VM was placed must finish (work conservation:

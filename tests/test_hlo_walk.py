@@ -4,8 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.hlo_walk import analyze_hlo
-from repro.analysis.roofline import Roofline, analyze_walk
-from repro.analysis import memory as memest
+from repro.analysis.roofline import analyze_walk
 
 
 def _hlo(f, *specs):
@@ -69,3 +68,76 @@ def test_roofline_bottleneck_logic():
     assert np.isclose(r.memory_s, 2.0)
     assert np.isclose(r.collective_s, 0.1)
     assert np.isclose(r.step_time_s, 2.0)
+
+
+_COND_HLO = """
+HloModule cond_walk_test
+
+%branch_heavy (p.1: f32[8,8]) -> f32[8,8] {
+  %p.1 = f32[8,8]{1,0} parameter(0)
+  ROOT %dot.1 = f32[8,8]{1,0} dot(f32[8,8]{1,0} %p.1, f32[8,8]{1,0} %p.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%branch_id (p.2: f32[8,8]) -> f32[8,8] {
+  %p.2 = f32[8,8]{1,0} parameter(0)
+  ROOT %copy.1 = f32[8,8]{1,0} copy(f32[8,8]{1,0} %p.2)
+}
+
+%body.1 (c.1: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %c.1 = (s32[], f32[8,8]) parameter(0)
+  %i.1 = s32[] get-tuple-element((s32[], f32[8,8]) %c.1), index=0
+  %x.1 = f32[8,8]{1,0} get-tuple-element((s32[], f32[8,8]) %c.1), index=1
+  %conditional.1 = f32[8,8]{1,0} conditional(s32[] %i.1, f32[8,8]{1,0} %x.1, f32[8,8]{1,0} %x.1), branch_computations={%branch_heavy, %branch_id}
+  ROOT %tuple.1 = (s32[], f32[8,8]) tuple(s32[] %i.1, f32[8,8]{1,0} %conditional.1)
+}
+
+%cond.1 (c.2: (s32[], f32[8,8])) -> pred[] {
+  %c.2 = (s32[], f32[8,8]) parameter(0)
+  %i.2 = s32[] get-tuple-element((s32[], f32[8,8]) %c.2), index=0
+  %k.1 = s32[] constant(7)
+  ROOT %lt.1 = pred[] compare(s32[] %i.2, s32[] %k.1), direction=LT
+}
+
+ENTRY %main.1 (x.0: f32[8,8]) -> f32[8,8] {
+  %x.0 = f32[8,8]{1,0} parameter(0)
+  %z.1 = s32[] constant(0)
+  %t.1 = (s32[], f32[8,8]) tuple(s32[] %z.1, f32[8,8]{1,0} %x.0)
+  %while.1 = (s32[], f32[8,8]) while((s32[], f32[8,8]) %t.1), condition=%cond.1, body=%body.1
+  ROOT %r.1 = f32[8,8]{1,0} get-tuple-element((s32[], f32[8,8]) %while.1), index=1
+}
+"""
+
+_PRED_COND_HLO = """
+HloModule pred_cond_walk_test
+
+%true_comp (p.1: f32[4,4]) -> f32[4,4] {
+  %p.1 = f32[4,4]{1,0} parameter(0)
+  ROOT %dot.1 = f32[4,4]{1,0} dot(f32[4,4]{1,0} %p.1, f32[4,4]{1,0} %p.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%false_comp (p.2: f32[4,4]) -> f32[4,4] {
+  %p.2 = f32[4,4]{1,0} parameter(0)
+  ROOT %copy.1 = f32[4,4]{1,0} copy(f32[4,4]{1,0} %p.2)
+}
+
+ENTRY %main.1 (pr.0: pred[], x.0: f32[4,4]) -> f32[4,4] {
+  %pr.0 = pred[] parameter(0)
+  %x.0 = f32[4,4]{1,0} parameter(1)
+  ROOT %conditional.1 = f32[4,4]{1,0} conditional(pred[] %pr.0, f32[4,4]{1,0} %x.0, f32[4,4]{1,0} %x.0), true_computation=%true_comp, false_computation=%false_comp
+}
+"""
+
+
+def test_conditional_branches_walked_and_trip_weighted():
+    """A dot inside a conditional branch inside a while must be counted,
+    weighted by the loop's trip count (the R1 parsing substrate)."""
+    t = analyze_hlo(_COND_HLO)
+    # 7 trips (max s32 constant in the condition) x one 8x8x8 dot per visit;
+    # both branches are walked (conservative upper bound), the empty branch
+    # contributes nothing.
+    np.testing.assert_allclose(t.dot_flops, 7 * 2 * 8 * 8 * 8, rtol=1e-6)
+
+
+def test_pred_conditional_true_false_computations_walked():
+    t = analyze_hlo(_PRED_COND_HLO)
+    np.testing.assert_allclose(t.dot_flops, 2 * 4 * 4 * 4, rtol=1e-6)

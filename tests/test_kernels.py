@@ -48,6 +48,86 @@ def test_advance_sweep_property(seed):
         assert np.isclose(np.array(nr)[act].min(), 0.0, atol=1e-3)
 
 
+# --------------------------------------------- vm_update ragged-row fallback
+#
+# Rows longer than one tile take the two-phase sub-grid (B, 2, nb).  A
+# non-power-of-two nb (e.g. 3 tiles) is the raggedest case: the reduction
+# crosses tile seams that don't align with any power-of-two split.  Contract:
+#   * dt is BITWISE equal to the jnp oracle — f32 min is order-exact, so
+#     tiling the reduction may not change a single bit;
+#   * rem' is BITWISE equal to the fused single-tile kernel — falling back
+#     must not change the kernel's math — and within 1 ULP of the oracle
+#     (XLA contracts the oracle's rem - rate*dt into an FMA; the kernel's
+#     separate mul/sub rounds the product, so exactly-finishing cloudlets
+#     can land 1 ULP apart; this is the only permitted divergence).
+
+def _advance_case(rng, b, c):
+    rem = jnp.asarray(rng.uniform(0.1, 100, (b, c)).astype(np.float32))
+    rate = jnp.asarray(rng.uniform(0, 5, (b, c)).astype(np.float32))
+    active = jnp.asarray(rng.random((b, c)) > 0.3)
+    bound = jnp.asarray(rng.uniform(0.1, 50, (b,)).astype(np.float32))
+    return rem, rate, active, bound
+
+
+@pytest.mark.parametrize("c,block,nb", [(300, 128, 3), (1280, 256, 5)])
+def test_advance_ragged_tiles_parity(c, block, nb):
+    from repro.kernels.vm_update import kernel_plan
+
+    plan = kernel_plan(2, c, block)
+    assert plan["variant"] == "two_phase" and plan["nb"] == nb
+
+    rem, rate, active, bound = _advance_case(np.random.default_rng(c), 2, c)
+    dt0, nr0 = ref.advance_sweep_ref(rem, rate, active, bound)
+    dt1, nr1 = advance_sweep_pallas(rem, rate, active, bound, block=block)
+    # same inputs through the FUSED kernel (block covering the whole row):
+    # the fallback's sliced reduction must reproduce it bit-for-bit
+    dt2, nr2 = advance_sweep_pallas(rem, rate, active, bound, block=2048)
+    np.testing.assert_array_equal(np.array(dt0), np.array(dt1))
+    np.testing.assert_array_equal(np.array(dt1), np.array(dt2))
+    np.testing.assert_array_equal(np.array(nr1), np.array(nr2))
+    np.testing.assert_allclose(np.array(nr0), np.array(nr1),
+                               rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.tier1
+def test_advance_resolver_fallback_frontier():
+    """Through ``ops.resolve_advance`` the two-phase path only engages past
+    the 2**17 tile cap: C = 3 * 2**17 is the smallest non-pow-2-nb row the
+    resolver can actually produce (nb = 3)."""
+    from repro.kernels import ops
+    from repro.kernels.vm_update import kernel_plan
+
+    c = 3 * ops._MAX_BLOCK
+    assert ops.advance_block(c) == ops._MAX_BLOCK
+    plan = kernel_plan(1, c, ops.advance_block(c))
+    assert plan["variant"] == "two_phase" and plan["nb"] == 3
+
+    rng = np.random.default_rng(17)
+    rem, rate, active, bound = _advance_case(rng, 1, c)
+    # rank-1 (single-scenario) through the resolver, both impls
+    args = (rem[0], rate[0], active[0], bound[0])
+    dt0, nr0 = ops.resolve_advance("jnp")(*args)
+    dt1, nr1 = ops.resolve_advance("pallas")(*args)
+    assert np.array(dt1).shape == ()
+    np.testing.assert_array_equal(np.array(dt0), np.array(dt1))
+    np.testing.assert_allclose(np.array(nr0), np.array(nr1),
+                               rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.tier1
+def test_advance_resolver_batch_major_fallback():
+    from repro.kernels import ops
+
+    c = 3 * ops._MAX_BLOCK
+    rem, rate, active, bound = _advance_case(np.random.default_rng(18), 2, c)
+    dt0, nr0 = ops.resolve_advance("jnp")(rem, rate, active, bound)
+    dt1, nr1 = ops.resolve_advance("pallas")(rem, rate, active, bound)
+    assert np.array(dt1).shape == (2,)
+    np.testing.assert_array_equal(np.array(dt0), np.array(dt1))
+    np.testing.assert_allclose(np.array(nr0), np.array(nr1),
+                               rtol=1e-6, atol=1e-5)
+
+
 # ------------------------------------------------------------ flash attention
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize(
@@ -144,7 +224,6 @@ def test_ssd_chunked_final_state():
     import jax
 
     Bh = jnp.repeat(Bm, h // g, axis=2)
-    Ch = jnp.repeat(Cm, h // g, axis=2)
 
     def step(hs, t):
         decay = jnp.exp(dt[:, t] * A)[..., None, None]

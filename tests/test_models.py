@@ -84,7 +84,7 @@ def test_smoke_decode_matches_forward(arch):
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_input_specs_cover_entry_points(arch):
     """input_specs trees must match the actual call signatures (eval_shape)."""
-    from repro.models import ALL_SHAPES, ShapeSpec, shape_applicable
+    from repro.models import ShapeSpec
 
     cfg = get_config(arch, smoke=True)
     model = build_model(cfg)

@@ -4,7 +4,6 @@ Property-style coverage without the optional hypothesis dependency (absent
 in the container image): each seed derives a random (n, e, cap) case, so 40
 parametrized seeds sweep the same space ``@given`` did.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

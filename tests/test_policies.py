@@ -34,8 +34,6 @@ def test_fig4_completion_times(hp, vp, expected):
 
 def test_policy_equivalence_unit_load():
     """1 task per VM, 1 single-core VM per host: all four policies agree."""
-    import jax.numpy as jnp
-
     ref = None
     for hp in (SPACE_SHARED, TIME_SHARED):
         for vp in (SPACE_SHARED, TIME_SHARED):

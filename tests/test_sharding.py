@@ -4,7 +4,6 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config
-from repro.launch.mesh import make_host_mesh
 from repro.models import TRAIN_4K, DECODE_32K, build_model
 from repro.dist import param_pspec_tree, input_pspec_tree
 
