@@ -3,7 +3,8 @@
     PYTHONPATH=src python -m benchmarks.check_regression \
         --baseline BENCH_baseline.json \
         --fresh BENCH_engine.json BENCH_event_engine.json \
-                BENCH_migration.json BENCH_reliability.json
+                BENCH_migration.json BENCH_reliability.json \
+                BENCH_campaign.json
 
 Merges the fresh reports (top-level sections are disjoint by construction:
 ``benchmarks/engine_sweep.py``, ``benchmarks/event_engine.py``,
@@ -25,6 +26,12 @@ updates together — see the baseline's ``_note`` key):
 * ``reliability_sweep.jnp.scenarios_per_s``    — vmapped host-failure MTBF x
                                                  policy campaign (the
                                                  revocation/failure path)
+* ``campaign_streaming.streaming.scenarios_per_s`` — >=1e5-point streaming
+                                                 sweep with fused reducer
+                                                 folds (DESIGN.md §12)
+* ``campaign_sharded.sharded.scenarios_per_s`` — the same sweep through the
+                                                 shard_map chunk runner
+                                                 (1-device mesh on CPU CI)
 
 Only the jnp path gates: the Pallas twin runs in interpret mode on CPU CI,
 so its wall time is a correctness seat, not a perf claim (DESIGN.md §4).
@@ -48,6 +55,8 @@ GATED = (
     ("event_engine_batch", "batch_major", "batch_events_per_s"),
     ("migration_sweep", "jnp", "scenarios_per_s"),
     ("reliability_sweep", "jnp", "scenarios_per_s"),
+    ("campaign_streaming", "streaming", "scenarios_per_s"),
+    ("campaign_sharded", "sharded", "scenarios_per_s"),
 )
 
 
@@ -93,7 +102,8 @@ def main(argv=None) -> int:
     ap.add_argument("--fresh", nargs="+",
                     default=["BENCH_engine.json", "BENCH_event_engine.json",
                              "BENCH_migration.json",
-                             "BENCH_reliability.json"],
+                             "BENCH_reliability.json",
+                             "BENCH_campaign.json"],
                     help="fresh report(s); top-level sections are merged")
     ap.add_argument("--tol", type=float, default=0.5,
                     help="fail when fresh/baseline falls below this ratio")

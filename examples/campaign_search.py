@@ -1,0 +1,92 @@
+"""Successive-halving policy search over an MTBF x ckpt x migration grid.
+
+The DESIGN.md §12 search loop end to end: sample candidate reliability
+configurations, simulate each as one row of a streamed campaign (the
+``[n, ...]`` results are never materialized), promote the top half to a
+longer horizon, and print the frontier — which checkpoint interval and
+migration posture survive which failure regimes, and the single best row.
+
+The MTBF knob is a *workload* dimension, not a ``Policy`` field: the
+``instantiate`` hook turns the sampled ``mtbf_s`` column into vmapped
+``workload.host_outages`` schedules (one seeded outage trace per
+candidate).  Everything — outage draws, checkpoint interval, migration
+threshold, the per-rung horizon — is traced, so both rungs and both runs
+of this script re-enter ONE compiled chunk program (simlint R5 probes
+exactly this loop).
+
+    PYTHONPATH=src python examples/campaign_search.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scenarios, workload
+from repro.core.search import successive_halving
+
+N0 = 16              # initial candidate population
+RUNG_HORIZONS = (10_000.0, 20_000.0)   # cheap screen, then full fidelity
+
+SPACE = {
+    # Policy knobs (traced fields, vmapped into template.policy)
+    "ckpt_interval": (50.0, 200.0, 800.0, 3.0e38),     # INF = no checkpoints
+    "migrate_balance_thresh": (0.75, 1e9),             # on / off
+    # workload knob (routed to `instantiate` below); short MTBFs so every
+    # candidate's run actually sees failures inside the horizon
+    "mtbf_s": (120.0, 300.0, 700.0),
+}
+
+
+def instantiate(template, extras, n, key):
+    """mtbf_s column -> per-candidate seeded outage schedules."""
+    d, h, k = template.outages.fail_t.shape
+    keys = jax.random.split(key, n)
+    outages = jax.vmap(
+        lambda kk, m: workload.host_outages(kk, d, h, k, m, 400.0)
+    )(keys, extras["mtbf_s"])
+    return {"outages": outages}
+
+
+def _fmt_thresh(v):
+    return "off" if float(v) > 1e6 else f"{float(v):.2f}"
+
+
+def main():
+    template = scenarios.reliability_scenario(
+        key=jax.random.PRNGKey(0), federation=True, sensor_interval=50.0)
+    out = successive_halving(
+        template, SPACE, key=jax.random.PRNGKey(42), n0=N0,
+        fidelities=RUNG_HORIZONS, metric="total_cost", chunk_size=8,
+        instantiate=instantiate,
+    )
+
+    print("rung  horizon   n   best-so-far (total_cost)")
+    for i, rung in enumerate(out["rungs"]):
+        v = np.array(rung["values"])
+        print(f"{i:>4}  {rung['fidelity']:>7.0f}  {len(v):>2}   {v.min():.2f}")
+
+    print("\nfrontier after rung 0 (survivors, cheapest first):")
+    print("   id    mtbf_s  ckpt_interval  balance_thresh  total_cost")
+    r0 = out["rungs"][0]
+    params = {k: np.array(v) for k, v in out["params"].items()}
+    order = np.argsort(np.array(r0["values"]))
+    for j in order[: N0 // 2]:
+        i = int(np.array(r0["candidates"])[j])
+        ckpt = params["ckpt_interval"][i]
+        print(f"  #{i:>3}  {params['mtbf_s'][i]:>8.0f}  "
+              f"{'off (INF)' if ckpt > 1e30 else f'{ckpt:.0f}':>13}  "
+              f"{_fmt_thresh(params['migrate_balance_thresh'][i]):>14}  "
+              f"{float(np.array(r0['values'])[j]):>10.2f}")
+
+    best = out["best_params"]
+    ckpt = float(best["ckpt_interval"])
+    print("\nwinner:")
+    print(f"  mtbf_s                 = {float(best['mtbf_s']):.0f}")
+    print(f"  ckpt_interval          = "
+          f"{'off (INF)' if ckpt > 1e30 else f'{ckpt:.0f}'}")
+    print(f"  migrate_balance_thresh = "
+          f"{_fmt_thresh(best['migrate_balance_thresh'])}")
+    print(f"  total_cost             = {float(out['best_value']):.2f}")
+
+
+if __name__ == "__main__":
+    main()

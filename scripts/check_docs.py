@@ -1,0 +1,93 @@
+#!/usr/bin/env python
+"""Docs-drift gate: docs/API.md field tables must match the live dataclasses.
+
+    PYTHONPATH=src python scripts/check_docs.py
+
+API.md documents ``Policy`` and ``SimResult`` as markdown tables whose first
+column is the backtick-quoted field name.  Adding a dataclass field without
+documenting it — or documenting a field that no longer exists — is exactly
+the silent drift that makes hand-written API docs rot, so CI fails on any
+asymmetric difference.  Field sets are compared, not order or prose.
+
+Code examples in the docs are verified separately (executed) by
+tests/test_docs.py; this script only audits the declarative tables.
+
+Exit status: 0 in sync, 1 drift, 2 missing/unparseable docs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+API_MD = os.path.join(ROOT, "docs", "API.md")
+
+# (heading regex locating the table, dataclass path)
+TABLES = (
+    (r"##.*\bPolicy fields\b", "repro.core.entities:Policy"),
+    (r"##.*\bSimResult fields\b", "repro.core.entities:SimResult"),
+)
+
+_ROW_FIELD = re.compile(r"^\|\s*`([A-Za-z_][A-Za-z0-9_]*)`")
+
+
+def table_fields(text: str, heading_re: str) -> set[str] | None:
+    """Backtick-quoted first-column names of the first markdown table under
+    the heading, or None if heading/table is missing."""
+    m = re.search(heading_re, text)
+    if not m:
+        return None
+    fields: set[str] = set()
+    in_table = False
+    for line in text[m.end():].splitlines():
+        row = _ROW_FIELD.match(line.strip())
+        if row:
+            in_table = True
+            fields.add(row.group(1))
+        elif in_table and not line.strip().startswith("|"):
+            break
+    return fields or None
+
+
+def live_fields(spec: str) -> set[str]:
+    mod_name, cls_name = spec.split(":")
+    mod = __import__(mod_name, fromlist=[cls_name])
+    return {f.name for f in dataclasses.fields(getattr(mod, cls_name))}
+
+
+def main() -> int:
+    try:
+        with open(API_MD) as f:
+            text = f.read()
+    except OSError as e:
+        print(f"error: cannot read {API_MD}: {e}", file=sys.stderr)
+        return 2
+    status = 0
+    for heading_re, spec in TABLES:
+        documented = table_fields(text, heading_re)
+        name = spec.split(":")[1]
+        if documented is None:
+            print(f"error: no field table under /{heading_re}/ in API.md",
+                  file=sys.stderr)
+            status = max(status, 2)
+            continue
+        live = live_fields(spec)
+        missing = sorted(live - documented)
+        stale = sorted(documented - live)
+        if missing:
+            print(f"DRIFT {name}: undocumented fields {missing}",
+                  file=sys.stderr)
+        if stale:
+            print(f"DRIFT {name}: documented but gone {stale}",
+                  file=sys.stderr)
+        if missing or stale:
+            status = max(status, 1)
+        else:
+            print(f"ok {name}: {len(live)} fields in sync")
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,7 +24,9 @@ R1     cond-not-select     the provision/dispatch phase predicates survive as
                            optimized HLO of both engine paths (DESIGN.md §10)
 R2     donation-aliases    the campaign chunk runner's compiled module aliases
                            every ``_donate_mask``-donatable input to an output
-                           (DESIGN.md §6; the PR-2 never-aliased regression)
+                           — on the local chunk AND through the shard_map
+                           lowering (DESIGN.md §6; the PR-2 never-aliased
+                           regression)
 R3     pure-observer       driver jaxprs and every Instrument hook carry no
                            effects — no ``io_callback``/``debug_callback``/
                            ``pure_callback``/``debug.print`` (DESIGN.md §3)
@@ -34,7 +36,9 @@ R4     shape-stable-scan   no dynamic-shape ops or data-dependent slice widths
                            batch paths (DESIGN.md §10)
 R5     recompile-hazard    tracing the same entry across two scenario
                            constructions hits the jit cache — one compilation
-                           (the one-compiled-program property, DESIGN.md §5)
+                           — and a successive-halving run's rungs all re-enter
+                           one compiled streaming-fold program (the
+                           one-compiled-program property, DESIGN.md §5/§12)
 R6     kernel-budget       the fused advance kernel's launch plan respects the
                            ``ops.advance_block`` heuristic bounds and declares
                            its ``[B]`` SMEM operands scalar-per-row
@@ -115,14 +119,19 @@ def _finding(rule_id: str, severity: str, entry: str, message: str,
 
 # Entry points traced by the default lint run.  ``batch`` is ``simulate`` on
 # a stacked campaign (the batch-major step loop); ``campaign_chunk`` is the
-# donating chunk runner's compiled module; ``advance_pallas`` is the fused
-# advance kernel in interpret mode.
+# donating chunk runner's compiled module; ``campaign_sharded`` is the same
+# chunk lowered through the ``shard_map`` runner on a 1-device ``data`` mesh
+# (the sharded-campaign path of DESIGN.md §12 — R1/R2 re-verify that phase
+# conditionals and buffer aliasing survive the shard_map lowering, and R5
+# probes that successive-halving rungs re-enter one compiled fold program);
+# ``advance_pallas`` is the fused advance kernel in interpret mode.
 ENTRY_NAMES = (
     "simulate",
     "simulate_trace",
     "simulate_history",
     "batch",
     "campaign_chunk",
+    "campaign_sharded",
     "advance_pallas",
 )
 
@@ -190,6 +199,15 @@ class LintContext:
             self._cache["scn_batch"] = campaign.stack_scenarios(rows)
         return self._cache["scn_batch"]
 
+    def mesh(self):
+        """A 1-device ``data`` mesh: exercises the full shard_map lowering
+        (partitioned module, pspec plumbing, donation-through-shards) while
+        staying runnable on any host."""
+        if "mesh" not in self._cache:
+            from jax.sharding import Mesh
+            self._cache["mesh"] = Mesh(jax.devices()[:1], ("data",))
+        return self._cache["mesh"]
+
     # -- entry callables ---------------------------------------------------
     def _entry_fn_args(self, entry: str):
         from repro.core import engine
@@ -204,6 +222,11 @@ class LintContext:
             return engine.simulate_history, (self.scenario(),)
         if entry == "batch":
             return engine.simulate, (self.batch_scenario(),)
+        if entry == "campaign_sharded":
+            from repro.core import campaign
+            mesh = self.mesh()
+            return (lambda scn: campaign._sharded_simulate(scn, mesh, "data"),
+                    (self.batch_scenario(),))
         if entry == "advance_pallas":
             b, c = _BATCH, 96
             args = (
@@ -227,9 +250,12 @@ class LintContext:
         """Optimized (post-XLA) HLO text of the compiled entry."""
         key = ("hlo", entry)
         if key not in self._cache:
-            if entry == "campaign_chunk":
+            if entry in ("campaign_chunk", "campaign_sharded"):
                 from repro.core import campaign
-                txt, n_donated = campaign.lower_chunk(self.batch_scenario())
+                mesh = self.mesh() if entry == "campaign_sharded" else None
+                txt, n_donated = campaign.lower_chunk(
+                    self.batch_scenario(), mesh=mesh
+                )
                 self._cache[key] = txt
                 self._cache[("n_donated", entry)] = n_donated
             else:
@@ -487,6 +513,32 @@ def check_one_compilation(jitted, n_calls_expected: int, entry: str,
     return []
 
 
+def check_rung_reuse(n_new_first: int, n_new_repeat: int, entry: str,
+                     rule_id: str = "R5") -> list[Finding]:
+    """Audit jit-cache *deltas* around a successive-halving run: the first
+    run may add at most one executable (every rung — shrinking populations,
+    changing fidelities — re-enters the same compiled fold program), and a
+    repeat run with different knob values must add none.  Deltas rather than
+    absolute sizes because the fold runner is a module-level jit whose cache
+    is shared with every other campaign in the process."""
+    findings = []
+    if n_new_first > 1:
+        findings.append(_finding(
+            rule_id, "error", entry,
+            f"successive-halving compiled {n_new_first} fold programs in "
+            "one run — a rung's population/fidelity change forked the jit "
+            "cache (fixed-slot ValuesReducer + pinned chunk_size broken?)",
+        ))
+    if n_new_repeat != 0:
+        findings.append(_finding(
+            rule_id, "error", entry,
+            f"re-running the search with different knob values compiled "
+            f"{n_new_repeat} new fold program(s) — a candidate knob became "
+            "static (one-compiled-program property, DESIGN.md §5)",
+        ))
+    return findings
+
+
 def check_kernel_plan(plan: dict, n_cloudlets: int, max_block: int,
                       entry: str, rule_id: str = "R6") -> list[Finding]:
     """Audit one advance-kernel launch plan against the ``advance_block``
@@ -535,12 +587,16 @@ def check_kernel_plan(plan: dict, n_cloudlets: int, max_block: int,
 # ---------------------------------------------------------------------------
 
 
-@rule("R1", "cond-not-select", entries=("simulate", "batch"))
+@rule("R1", "cond-not-select",
+      entries=("simulate", "batch", "campaign_sharded"))
 def _rule_cond_not_select(ctx: LintContext) -> list[Finding]:
     """Phase predicates lower to real HLO conditionals, not select."""
     from repro.core import step
     findings = []
-    for entry in ("simulate", "batch"):
+    # campaign_sharded re-checks the same property through the shard_map
+    # lowering — a partitioner that flattened the conds would silently
+    # forfeit phase skipping on every sharded campaign
+    for entry in ("simulate", "batch", "campaign_sharded"):
         if not ctx.wants(entry):
             continue
         findings += check_cond_not_select(
@@ -549,14 +605,17 @@ def _rule_cond_not_select(ctx: LintContext) -> list[Finding]:
     return findings
 
 
-@rule("R2", "donation-aliases", entries=("campaign_chunk",))
+@rule("R2", "donation-aliases", entries=("campaign_chunk", "campaign_sharded"))
 def _rule_donation_aliases(ctx: LintContext) -> list[Finding]:
     """Campaign chunk donation produces real input/output aliasing."""
-    if not ctx.wants("campaign_chunk"):
-        return []
-    return check_donation_aliases(
-        ctx.hlo("campaign_chunk"), ctx.n_donated(), "campaign_chunk"
-    )
+    findings = []
+    for entry in ("campaign_chunk", "campaign_sharded"):
+        if not ctx.wants(entry):
+            continue
+        findings += check_donation_aliases(
+            ctx.hlo(entry), ctx.n_donated(entry), entry
+        )
+    return findings
 
 
 def _instrument_hook_jaxprs(scn):
@@ -600,11 +659,13 @@ def _instrument_hook_jaxprs(scn):
 
 
 @rule("R3", "pure-observer",
-      entries=("simulate", "simulate_trace", "simulate_history", "batch"))
+      entries=("simulate", "simulate_trace", "simulate_history", "batch",
+               "campaign_sharded"))
 def _rule_pure_observer(ctx: LintContext) -> list[Finding]:
     """Drivers and instrument hooks carry no effects."""
     findings = []
-    for entry in ("simulate", "simulate_trace", "simulate_history", "batch"):
+    for entry in ("simulate", "simulate_trace", "simulate_history", "batch",
+                  "campaign_sharded"):
         if not ctx.wants(entry):
             continue
         findings += check_effects(ctx.jaxpr(entry), entry)
@@ -622,12 +683,12 @@ def _shape_tree(tree) -> dict:
 
 
 @rule("R4", "shape-stable-scan",
-      entries=("simulate", "batch", "advance_pallas"))
+      entries=("simulate", "batch", "campaign_sharded", "advance_pallas"))
 def _rule_shape_stable(ctx: LintContext) -> list[Finding]:
     """All shapes static; SimState rank-consistent across engine paths."""
     from repro.core import engine
     findings = []
-    for entry in ("simulate", "batch", "advance_pallas"):
+    for entry in ("simulate", "batch", "campaign_sharded", "advance_pallas"):
         if not ctx.wants(entry):
             continue
         findings += check_shape_stability(ctx.jaxpr(entry), entry)
@@ -641,7 +702,8 @@ def _rule_shape_stable(ctx: LintContext) -> list[Finding]:
     return findings
 
 
-@rule("R5", "recompile-hazard", entries=("simulate", "batch"))
+@rule("R5", "recompile-hazard",
+      entries=("simulate", "batch", "campaign_sharded"))
 def _rule_recompile_hazard(ctx: LintContext) -> list[Finding]:
     """Same entry, two scenario constructions, one compilation."""
     from repro.core import engine
@@ -660,6 +722,27 @@ def _rule_recompile_hazard(ctx: LintContext) -> list[Finding]:
         g(ctx.batch_scenario())
         g(campaign.broadcast_campaign(ctx.scenario_variant(), _BATCH))
         findings += check_one_compilation(g, 2, "batch")
+    if ctx.wants("campaign_sharded"):
+        # the search driver's rung-reuse claim: a whole successive-halving
+        # run (shrinking populations, rising fidelities) through the sharded
+        # streaming fold adds at most ONE executable to the fold runner's
+        # cache, and a re-run with fresh knob values adds zero.  The fold
+        # runner is a module-level jit, so measure deltas, not sizes.
+        from repro.core import campaign, search
+        size = campaign._run_chunk_fold._cache_size
+        space = {"sensor_interval": (1.0, 2.0, 4.0),
+                 "ckpt_interval": (50.0, 100.0)}
+        kw = dict(n0=4, fidelities=(100.0, 400.0), chunk_size=2,
+                  metric="mean_turnaround", mesh=ctx.mesh())
+        before = size()
+        search.successive_halving(ctx.scenario(), space,
+                                  key=jax.random.PRNGKey(0), **kw)
+        mid = size()
+        search.successive_halving(ctx.scenario(), space,
+                                  key=jax.random.PRNGKey(7), **kw)
+        findings += check_rung_reuse(
+            mid - before, size() - mid, "campaign_sharded"
+        )
     return findings
 
 

@@ -51,11 +51,20 @@ from repro.core.campaign import (
     run_campaign_sharded,
     stack_scenarios,
 )
+from repro.core.reducers import (
+    ArgBestReducer,
+    CampaignReducer,
+    HistogramReducer,
+    MeanReducer,
+    SumReducer,
+    ValuesReducer,
+)
 from repro.core import (
     energy,
     policies,
     provision,
     scenarios,
+    search,
     segments,
     step,
     workload,
@@ -72,6 +81,8 @@ __all__ = [
     "simulate", "simulate_history", "simulate_instrumented", "simulate_trace",
     "broadcast_campaign", "run_campaign", "run_campaign_sharded",
     "stack_scenarios",
-    "energy", "policies", "provision", "scenarios", "segments", "step",
-    "workload",
+    "ArgBestReducer", "CampaignReducer", "HistogramReducer", "MeanReducer",
+    "SumReducer", "ValuesReducer",
+    "energy", "policies", "provision", "scenarios", "search", "segments",
+    "step", "workload",
 ]

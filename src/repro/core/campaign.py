@@ -1,20 +1,29 @@
-"""Simulation campaigns: vmap x shard_map over whole simulations.
+"""Simulation campaigns: batch-major sweeps, sharded chunks, streaming folds.
 
 What cloud researchers actually run with CloudSim is not one simulation but
 *sweeps* — policy x seed x workload grids.  Because the engine is a pure
 function with traced policy/workload values and static shapes, a campaign is
 ``simulate`` on the stacked scenario pytree — the batch-major step loop
 advances every row natively, with batch-global phase skipping and early-exit
-masking (DESIGN.md §10); on a mesh it becomes ``shard_map`` over the data axis so a
-256-chip pod evaluates 256+ federated-cloud scenarios concurrently.  This is
-the paper's "repeatable, controllable, free-of-cost" experimentation scaled
-three orders of magnitude (DESIGN.md §2, §5).
+masking (DESIGN.md §10).  This module turns that kernel into a
+million-scenario product (DESIGN.md §12):
 
-Memory: a vmapped while_loop materializes every scenario's full working set
-at once, so 10k+-scenario sweeps can exceed device memory even though each
-simulation is tiny.  ``run_campaign(batched, chunk_size=...)`` slices the
-campaign axis into fixed-size chunks (one compilation, reused), donating each
-chunk's buffers to XLA so working memory is bounded by one chunk.
+* ``run_campaign(batched, chunk_size=...)`` — slice the campaign axis into
+  fixed-size chunks through ONE compiled program (trailing chunk padded by
+  repeating the last row, then trimmed/masked), donating each chunk's
+  output-aliasable buffers so working memory is bounded by one chunk.
+* ``run_campaign(..., mesh=...)`` — shard each chunk's campaign axis across
+  ``mesh[axis]`` via ``shard_map`` (PartitionSpecs from
+  ``dist.sharding.campaign_pspec_tree``): shards simulate their rows fully
+  locally, so the collective term of this workload is exactly zero and a
+  256-device mesh evaluates 256 sub-campaigns concurrently.
+* ``run_campaign(..., reduce=...)`` — fold each chunk's ``SimResult`` into
+  fixed-shape ``CampaignReducer`` carries *inside the compiled chunk
+  program*: the ``[N, ...]`` result pytree is never materialized, so sweep
+  size is bounded by wall clock, not memory (core/reducers.py).
+
+``core/search.py`` drives these three together: successive-halving over
+policy grids where every rung re-enters the same compiled chunk program.
 """
 from __future__ import annotations
 
@@ -25,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.core.engine import simulate
 from repro.core.entities import Scenario, SimResult
+from repro.core.reducers import CampaignReducer
 from repro.dist.compat import shard_map as _shard_map
 
 
@@ -104,6 +114,47 @@ def broadcast_campaign(template: Scenario, n: int, **overrides) -> Scenario:
 _run_whole = jax.jit(simulate)
 
 
+def _sharded_simulate(chunk: Scenario, mesh, axis: str) -> SimResult:
+    """``simulate`` with the chunk's campaign axis shard_mapped over
+    ``mesh[axis]``.
+
+    In-specs come from the ``dist.sharding`` campaign rule
+    (``campaign_pspec_tree``): leading axis on ``mesh[axis]``, everything
+    else replicated.  Each shard's sub-campaign keeps its leading rank, so
+    ``engine.is_batched`` still routes it through the batch-major step —
+    per-shard results are bitwise those of the unsharded run.  Replication
+    checking is off (the compat shim): the while-loop carry mixes varying
+    per-row state with scalars the static checker cannot prove replicated.
+    """
+    from repro.dist.sharding import campaign_pspec_tree
+
+    in_tree = campaign_pspec_tree(chunk, mesh, axis)
+    pspec = jax.sharding.PartitionSpec
+    specs = jax.tree.leaves(in_tree, is_leaf=lambda x: isinstance(x, pspec))
+    if any(s and s[0] is None for s in specs):
+        n = _campaign_len(chunk)
+        raise ValueError(
+            f"campaign axis of {n} rows is not divisible by mesh axis "
+            f"{axis!r} (size {dict(mesh.shape)[axis]}); pick a chunk_size "
+            "that divides"
+        )
+    run = _shard_map(
+        simulate, mesh=mesh, in_specs=(in_tree,), out_specs=pspec(axis)
+    )
+    return run(chunk)
+
+
+def _sim_fn(mesh, axis: str):
+    if mesh is None:
+        return simulate
+    return lambda chunk: _sharded_simulate(chunk, mesh, axis)
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def _run_whole_sharded(batched: Scenario, mesh, axis: str) -> SimResult:
+    return _sharded_simulate(batched, mesh, axis)
+
+
 # --------------------------------------------------------------------------
 # chunked execution with *effective* buffer donation
 #
@@ -115,6 +166,10 @@ _run_whole = jax.jit(simulate)
 # multiset against eval_shape of the result) and passes the rest undonated.
 # tests/test_campaign.py promotes the donation UserWarning to an error, so a
 # regression to wholesale donation fails loudly.
+#
+# The streaming runner (_run_chunk_fold) donates the reducer *carries*
+# instead: its only outputs are the carries, which alias their input buffers
+# exactly, while the scenario chunk has no output counterpart at all.
 # --------------------------------------------------------------------------
 
 @lru_cache(maxsize=None)
@@ -137,11 +192,11 @@ def _donate_mask(treedef, avals: tuple) -> tuple[bool, ...]:
     return tuple(mask)
 
 
-@partial(jax.jit, static_argnums=(2, 3), donate_argnums=(0,))
-def _run_chunk_split(donated, kept, mask, treedef):
+@partial(jax.jit, static_argnums=(2, 3, 4, 5), donate_argnums=(0,))
+def _run_chunk_split(donated, kept, mask, treedef, mesh=None, axis="data"):
     it_d, it_k = iter(donated), iter(kept)
     leaves = [next(it_d) if m else next(it_k) for m in mask]
-    return simulate(jax.tree.unflatten(treedef, leaves))
+    return _sim_fn(mesh, axis)(jax.tree.unflatten(treedef, leaves))
 
 
 def _split_chunk(chunk: Scenario):
@@ -154,42 +209,169 @@ def _split_chunk(chunk: Scenario):
     return donated, kept, mask, treedef
 
 
-def _run_chunk(chunk: Scenario) -> SimResult:
+def _run_chunk(chunk: Scenario, mesh=None, axis: str = "data") -> SimResult:
     donated, kept, mask, treedef = _split_chunk(chunk)
-    return _run_chunk_split(donated, kept, mask, treedef)
+    return _run_chunk_split(donated, kept, mask, treedef, mesh, axis)
 
 
-def lower_chunk(chunk: Scenario) -> tuple[str, int]:
+def lower_chunk(chunk: Scenario, mesh=None, axis: str = "data") -> tuple[str, int]:
     """AOT-compile one campaign chunk through the donating runner and return
     ``(optimized_hlo_text, n_donated)``.
 
     The HLO module header carries XLA's ``input_output_alias`` table; simlint
     rule R2 checks it covers every ``_donate_mask``-donatable leaf, catching
     the PR-2 "donation that never aliased" regression class statically —
-    without running a campaign.
+    without running a campaign.  With ``mesh`` the chunk is lowered through
+    the shard_map runner instead (the ``campaign_sharded`` lint entry).
     """
     donated, kept, mask, treedef = _split_chunk(chunk)
-    compiled = _run_chunk_split.lower(donated, kept, mask, treedef).compile()
+    compiled = _run_chunk_split.lower(
+        donated, kept, mask, treedef, mesh, axis
+    ).compile()
     return compiled.as_text(), sum(mask)
 
 
+# --------------------------------------------------------------------------
+# streaming reductions: fold chunk results into fixed-shape carries
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnums=(3, 4, 5, 6), donate_argnums=(2,))
+def _run_chunk_fold(leaves, bounds, carries, treedef, reducers, mesh, axis):
+    scn = jax.tree.unflatten(treedef, leaves)
+    res = _sim_fn(mesh, axis)(scn)
+    size = jax.tree.leaves(scn)[0].shape[0]
+    index = bounds[0] + jnp.arange(size, dtype=jnp.int32)
+    valid = index < bounds[1]
+    return tuple(
+        r.fold(c, scn, res, index, valid)
+        for r, c in zip(reducers, carries)
+    )
+
+
+def _normalize_reduce(reduce):
+    """-> (keys | None, tuple_of_reducers, single_flag)."""
+    if isinstance(reduce, CampaignReducer):
+        return None, (reduce,), True
+    if isinstance(reduce, dict):
+        for k, r in reduce.items():
+            if not isinstance(r, CampaignReducer):
+                raise TypeError(f"reduce[{k!r}] is not a CampaignReducer")
+        return tuple(reduce), tuple(reduce.values()), False
+    raise TypeError(
+        f"reduce must be a CampaignReducer or a dict of them, got {reduce!r}"
+    )
+
+
+def _run_reduced(batched: Scenario, chunk_size: int | None, reduce,
+                 mesh, axis: str):
+    keys, reducers, single = _normalize_reduce(reduce)
+    n = _campaign_len(batched)
+    chunk = chunk_size or n
+
+    leaves0, treedef = jax.tree.flatten(batched)
+    chunk_avals = jax.tree.unflatten(treedef, [
+        jax.ShapeDtypeStruct((chunk,) + l.shape[1:], l.dtype)
+        for l in leaves0
+    ])
+    res_avals = jax.eval_shape(simulate, chunk_avals)
+    carries = tuple(r.init(chunk_avals, res_avals) for r in reducers)
+
+    # With a mesh, pin every input's sharding before each fold call:
+    # otherwise arrays that flow back from a previous fold (search-driver
+    # survivors, the carries themselves) arrive committed to mesh shardings
+    # while fresh chunks arrive uncommitted, and the differing shardings
+    # fork the jit cache per call — the exact hazard simlint R5 probes.
+    leaf_shardings = rep = None
+    if mesh is not None:
+        from repro.dist.sharding import campaign_pspec_tree, named
+
+        leaf_shardings = jax.tree.leaves(
+            named(mesh, campaign_pspec_tree(chunk_avals, mesh, axis)),
+            is_leaf=lambda x: isinstance(x, jax.sharding.NamedSharding),
+        )
+        rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    for lo in range(0, n, chunk):
+        def _slice(x):
+            c = x[lo:lo + chunk]
+            short = chunk - c.shape[0]
+            if short:
+                pad = jnp.broadcast_to(x[-1:], (short,) + x.shape[1:])
+                c = jnp.concatenate([c, pad])
+            return c
+
+        leaves = tuple(jax.tree.leaves(jax.tree.map(_slice, batched)))
+        if mesh is not None:
+            leaves = tuple(
+                jax.device_put(l, s) for l, s in zip(leaves, leaf_shardings)
+            )
+            carries = jax.device_put(carries, rep)
+        # (lo, n) ride as one traced i32[2] so every chunk — first, middle,
+        # padded tail — reuses the same compiled fold program
+        bounds = jnp.asarray([lo, n], jnp.int32)
+        carries = _run_chunk_fold(
+            leaves, bounds, carries, treedef, reducers, mesh, axis
+        )
+    outs = tuple(r.finalize(c) for r, c in zip(reducers, carries))
+    if keys is not None:
+        return dict(zip(keys, outs))
+    return outs[0] if single else outs
+
+
 def run_campaign(
-    batched: Scenario, chunk_size: int | None = None, donate: bool = False
+    batched: Scenario,
+    chunk_size: int | None = None,
+    donate: bool = False,
+    reduce=None,
+    mesh=None,
+    axis: str = "data",
 ) -> SimResult:
-    """Run a stacked campaign on the local device.
+    """Run a stacked campaign; the front door for every sweep size.
 
     ``chunk_size`` bounds working memory: the campaign axis is processed in
     fixed-size chunks through one compiled program (the trailing chunk is
     padded by repeating the last scenario, then trimmed), each chunk's
     output-aliasable input buffers donated to XLA.  ``donate=True`` applies
-    the same donation to the unchunked path — only safe when the caller is
-    done with ``batched``.
+    the same donation to the unchunked local path — only safe when the
+    caller is done with ``batched``.
+
+    ``mesh`` shards every chunk's campaign axis over ``mesh[axis]`` via
+    ``shard_map`` (specs from ``dist.sharding.campaign_pspec_tree``); the
+    chunk size (or the whole campaign when unchunked) must be divisible by
+    that mesh axis.  Shards never communicate — simulations are
+    embarrassingly parallel — so this scales linearly until chunks starve.
+
+    ``reduce`` (a ``CampaignReducer`` or dict of them, core/reducers.py)
+    switches to streaming mode: each chunk's results fold into fixed-shape
+    carries inside the compiled chunk program and only the finalized
+    summary (dict mirroring ``reduce``) returns — the ``[N, ...]`` result
+    pytree is never materialized, which is what makes 1e5–1e6-point sweeps
+    memory-feasible (DESIGN.md §12).
     """
-    if chunk_size is None:
-        return (_run_chunk if donate else _run_whole)(batched)
-    if chunk_size <= 0:
+    if chunk_size is not None and chunk_size <= 0:
         raise ValueError(f"chunk_size must be positive, got {chunk_size}")
     n = _campaign_len(batched)
+    if mesh is not None:
+        if axis not in dict(mesh.shape):
+            raise ValueError(
+                f"mesh has no axis {axis!r}; axes: {tuple(mesh.axis_names)}"
+            )
+        per = chunk_size or n
+        if per % dict(mesh.shape)[axis]:
+            raise ValueError(
+                f"chunk of {per} rows is not divisible by mesh axis "
+                f"{axis!r} (size {dict(mesh.shape)[axis]})"
+            )
+    if reduce is not None:
+        return _run_reduced(batched, chunk_size, reduce, mesh, axis)
+    if chunk_size is None:
+        if mesh is None:
+            return (_run_chunk if donate else _run_whole)(batched)
+        from repro.dist.sharding import campaign_pspec_tree, named
+
+        sharding = named(mesh, campaign_pspec_tree(batched, mesh, axis))
+        batched = jax.device_put(batched, sharding)
+        return _run_whole_sharded(batched, mesh, axis)
     results = []
     for lo in range(0, n, chunk_size):
         def _slice(x):
@@ -201,33 +383,17 @@ def run_campaign(
             return c
 
         # the chunk is a fresh temporary -> donating it is always safe
-        results.append(_run_chunk(jax.tree.map(_slice, batched)))
+        results.append(_run_chunk(jax.tree.map(_slice, batched), mesh, axis))
     return jax.tree.map(lambda *xs: jnp.concatenate(xs)[:n], *results)
 
 
 def run_campaign_sharded(batched: Scenario, mesh, axis: str = "data") -> SimResult:
     """Shard the campaign's leading axis across ``mesh[axis]``.
 
-    Each device runs its slice of scenarios entirely locally; there is no
-    cross-device communication inside a simulation (simulations are
-    embarrassingly parallel), so the collective term of this workload's
-    roofline is exactly zero — see EXPERIMENTS.md §Roofline (campaign row).
+    Kept as the one-argument spelling of ``run_campaign(batched,
+    mesh=mesh)``; see there.  Each device runs its slice of scenarios
+    entirely locally; there is no cross-device communication inside a
+    simulation, so the collective term of this workload's roofline is
+    exactly zero.
     """
-    pspec = jax.sharding.PartitionSpec(axis)
-    sharding = jax.sharding.NamedSharding(mesh, pspec)
-
-    # while-loop carries mix varying (per-sim state) and unvarying (scalars
-    # broadcast inside the loop) types, so replication checking is off (the
-    # compat shim); correctness is per-shard independence, which
-    # the batch-major simulate guarantees
-    @partial(
-        _shard_map,
-        mesh=mesh,
-        in_specs=(pspec,),
-        out_specs=pspec,
-    )
-    def _run(shard: Scenario) -> SimResult:
-        return simulate(shard)
-
-    batched = jax.device_put(batched, sharding)
-    return jax.jit(_run)(batched)
+    return run_campaign(batched, mesh=mesh, axis=axis)

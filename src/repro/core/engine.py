@@ -177,10 +177,11 @@ def entry_points() -> dict:
     """The engine's public driver surface, by stable name.
 
     ``analysis/simlint.py`` traces exactly these (plus the campaign chunk
-    runner and the Pallas advance kernel) when verifying the structural
-    invariants of the compiled program — a new driver added here is linted
-    automatically.  ``simulate`` covers both engine paths: handed a stacked
-    campaign it routes through ``batch_event_step`` (see ``is_batched``).
+    runner, its shard_map-sharded twin, and the Pallas advance kernel) when
+    verifying the structural invariants of the compiled program — a new
+    driver added here is linted automatically.  ``simulate`` covers both
+    engine paths: handed a stacked campaign it routes through
+    ``batch_event_step`` (see ``is_batched``).
     """
     return {
         "simulate": simulate,

@@ -62,6 +62,17 @@ def make_policy(
     evacuation: bool = False,
     evac_lead_s: float = 60.0,
 ) -> Policy:
+    """Build a ``Policy`` from Python values, casting every knob to its
+    traced array dtype.
+
+    Every field is simulation *data*, not jit metadata — which is why one
+    compiled program serves a whole policy sweep (vmap/stack over policies,
+    DESIGN.md §5) and why the search driver can change knob values between
+    successive-halving rungs without recompiling.  See the field table in
+    docs/API.md; defaults reproduce the paper's baseline configuration
+    (space-shared at both levels, no federation/autoscale/migration/
+    reliability machinery).
+    """
     return Policy(
         host_policy=jnp.asarray(host_policy, jnp.int32),
         vm_policy=jnp.asarray(vm_policy, jnp.int32),
@@ -96,6 +107,12 @@ def uniform_hosts(
     bw_mbps: float = 1000.0,
     exists: np.ndarray | None = None,
 ) -> Hosts:
+    """Homogeneous ``[n_dc, hosts_per_dc]`` host grid.
+
+    ``exists`` masks rows out of a fixed-shape grid — ragged federations
+    (DCs with different host counts) use one rectangular array plus the
+    mask, never per-DC shapes (the fixed-shape rule, DESIGN.md §2).
+    """
     shape = (n_dc, hosts_per_dc)
     ex = np.ones(shape, bool) if exists is None else exists
     return Hosts(
@@ -120,6 +137,13 @@ def uniform_vms(
     image_mb: float = 1024.0,
     pool: bool | np.ndarray = False,
 ) -> VMRequests:
+    """``n`` identical VM requests; scalar args broadcast, arrays vary per VM.
+
+    ``dc`` pins each request's home datacenter (federation may migrate it
+    later); ``request_t`` staggers arrivals; ``pool=True`` rows are
+    autoscaler-managed spares that start unprovisioned (step.py
+    ``AutoscaleInstrument``).
+    """
     return VMRequests(
         dc=jnp.broadcast_to(jnp.asarray(dc, _I), (n,)),
         cores=jnp.full((n,), cores, _I),
@@ -135,6 +159,9 @@ def uniform_vms(
 
 
 def uniform_market(n_dc: int, cpu=3.0, ram=0.05, storage=0.001, bw=0.1) -> Market:
+    """Per-DC resource prices (the paper's $/CPU-s, $/MB rates), identical
+    across the federation; heterogeneous markets pass arrays directly to
+    ``Market``."""
     return Market(
         cost_per_cpu_sec=jnp.full((n_dc,), cpu, _F),
         cost_per_ram_mb=jnp.full((n_dc,), ram, _F),

@@ -1,0 +1,199 @@
+"""Policy search over campaign grids: random search and successive halving.
+
+A policy study is an optimization loop around ``run_campaign``: sample
+candidate ``Policy`` / workload knobs, simulate each candidate as one row of
+a stacked campaign, score a ``SimResult`` metric, and iterate.  What makes
+this fast here is what every PR since PR 3 has protected: the knobs are
+*traced*, so changing candidate values — or shrinking the population between
+successive-halving rungs — re-enters the SAME compiled chunk program
+(simlint R5 verifies the rung loop compiles exactly once; DESIGN.md §12).
+
+Knob spaces are plain dicts ``{name: candidate values}``.  Names that are
+``Policy`` dataclass fields are vmapped into ``template.policy``; anything
+else (workload knobs such as MTBF) is routed to the caller's
+``instantiate(template, extras, n, key)`` hook, which returns
+``broadcast_campaign`` overrides — e.g. vmapped ``workload.host_outages``
+schedules.  See examples/campaign_search.py for the end-to-end shape.
+
+Successive halving keeps its compiled program fixed across rungs by
+construction: scores scatter into a ``ValuesReducer`` with ``n_slots`` =
+initial population, the chunk size never changes (smaller rung populations
+pad to the same chunk shape), and the per-rung fidelity (default: the traced
+``policy.horizon``) rides as data.  Survivor selection is a host-side
+argsort of the rung's score table.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.campaign import broadcast_campaign, run_campaign
+from repro.core.entities import Policy, Scenario
+from repro.core.reducers import ValuesReducer
+
+_POLICY_FIELDS = frozenset(f.name for f in dataclasses.fields(Policy))
+
+
+def grid_params(space: dict) -> dict:
+    """Full cartesian product of a knob space -> ``{name: [prod] array}``.
+
+    The exhaustive counterpart to ``sample_params``: a
+    ``{mtbf: 4, ckpt: 4, migration: 2}`` space becomes 32 aligned candidate
+    rows, ready for ``build_campaign`` / ``run_campaign``.
+    """
+    if not space:
+        raise ValueError("empty search space")
+    names = tuple(space)
+    axes = [jnp.asarray(space[k]) for k in names]
+    grids = jnp.meshgrid(*axes, indexing="ij")
+    return {k: g.reshape(-1) for k, g in zip(names, grids)}
+
+
+def sample_params(key, space: dict, n: int) -> dict:
+    """Sample ``n`` candidates uniformly from each knob's value list.
+
+    Independent per-knob draws (random search in the grid's support): for
+    the high-dimensional spaces where exhaustive grids explode, uniform
+    random candidates cover each marginal at the same density.
+    """
+    if not space:
+        raise ValueError("empty search space")
+    params = {}
+    for sub, (name, vals) in zip(
+        jax.random.split(key, len(space)), sorted(space.items())
+    ):
+        vals = jnp.asarray(vals)
+        idx = jax.random.randint(sub, (n,), 0, vals.shape[0])
+        params[name] = vals[idx]
+    return params
+
+
+def build_campaign(template: Scenario, params: dict, *,
+                   instantiate=None, key=None) -> Scenario:
+    """Candidate table -> stacked campaign.
+
+    ``params`` maps knob names to aligned ``[n]`` value arrays.  ``Policy``
+    field names are vmap-substituted into ``template.policy``; the rest are
+    handed to ``instantiate(template, extras, n, key)`` which must return a
+    dict of ``broadcast_campaign`` overrides (e.g. a vmapped ``outages=``
+    schedule built from an ``mtbf_s`` column).
+    """
+    n = int(jnp.shape(next(iter(params.values())))[0])
+    pol_kw = {k: jnp.asarray(v) for k, v in params.items()
+              if k in _POLICY_FIELDS}
+    extras = {k: jnp.asarray(v) for k, v in params.items()
+              if k not in _POLICY_FIELDS}
+    overrides = {}
+    if pol_kw:
+        overrides["policy"] = jax.vmap(
+            lambda kw: template.policy.replace(**kw)
+        )(pol_kw)
+    if extras:
+        if instantiate is None:
+            raise ValueError(
+                f"knobs {sorted(extras)} are not Policy fields; pass "
+                "instantiate=(template, extras, n, key) -> overrides to "
+                "build their scenario subtrees"
+            )
+        more = instantiate(template, extras, n, key)
+        overlap = set(more) & set(overrides)
+        if overlap:
+            raise ValueError(f"instantiate returned {sorted(overlap)}, "
+                             "already produced from Policy knobs")
+        overrides.update(more)
+    return broadcast_campaign(template, n, **overrides)
+
+
+def _take(params: dict, idx) -> dict:
+    return {k: v[idx] for k, v in params.items()}
+
+
+def random_search(template: Scenario, space: dict, *, key, n: int,
+                  metric="total_cost", mode: str = "min",
+                  chunk_size: int | None = None, mesh=None,
+                  axis: str = "data", instantiate=None) -> dict:
+    """Score ``n`` uniformly-sampled candidates in one streamed campaign.
+
+    Returns ``{"params", "values", "best_params", "best_value",
+    "best_index"}`` — the full candidate table plus its scores, never the
+    ``[n, ...]`` results.  ``chunk_size``/``mesh`` stream and shard exactly
+    as in ``run_campaign``.
+    """
+    k_sample, k_inst = jax.random.split(key)
+    params = sample_params(k_sample, space, n)
+    batched = build_campaign(template, params,
+                             instantiate=instantiate, key=k_inst)
+    out = run_campaign(batched, chunk_size=chunk_size, mesh=mesh, axis=axis,
+                       reduce=ValuesReducer(metric, n_slots=n))
+    values = out["values"]
+    sign = 1.0 if mode == "min" else -1.0
+    best = int(jnp.argmin(sign * values))
+    return {"params": params, "values": values,
+            "best_params": _take(params, best),
+            "best_value": values[best], "best_index": best}
+
+
+def successive_halving(template: Scenario, space: dict, *, key, n0: int,
+                       fidelities, eta: int = 2, metric="total_cost",
+                       mode: str = "min", fidelity_knob: str = "horizon",
+                       chunk_size: int | None = None, mesh=None,
+                       axis: str = "data", instantiate=None) -> dict:
+    """Successive halving: evaluate everyone cheaply, promote the top
+    ``1/eta`` to the next (more expensive) fidelity, repeat.
+
+    ``fidelities`` gives ``fidelity_knob`` (a traced ``Policy`` field;
+    default the simulation ``horizon``, which bounds the event loop) one
+    value per rung, cheapest first.  Every rung re-enters ONE compiled
+    chunk program: the score table is a fixed ``n_slots=n0``
+    ``ValuesReducer``, the chunk size is pinned to ``chunk_size or n0`` (a
+    shrinking population pads back up to it), and both the candidate knobs
+    and the fidelity ride as traced data — so rung 3's 8 survivors at full
+    horizon hit the jit cache warmed by rung 0's 64 candidates at 1/8
+    horizon (simlint R5 probes exactly this).
+
+    Returns ``{"params", "best_params", "best_value", "best_index",
+    "rungs"}``: the full ``[n0]`` candidate table, the winner, and per-rung
+    ``{fidelity, candidates, values}`` records (``candidates`` = surviving
+    global candidate indices into ``params``, for frontier summaries).
+    """
+    if fidelity_knob not in _POLICY_FIELDS:
+        raise ValueError(f"fidelity knob {fidelity_knob!r} is not a Policy "
+                         "field (must be traced to avoid recompiles)")
+    if fidelity_knob in space:
+        raise ValueError(f"fidelity knob {fidelity_knob!r} cannot also be "
+                         "a search dimension")
+    if n0 < eta ** (len(tuple(fidelities)) - 1):
+        raise ValueError(f"n0={n0} cannot halve {len(tuple(fidelities)) - 1}"
+                         f" times by eta={eta}")
+    k_sample, k_inst = jax.random.split(key)
+    params = sample_params(k_sample, space, n0)
+    chunk = chunk_size or n0
+    reducer = ValuesReducer(metric, n_slots=n0)
+    sign = 1.0 if mode == "min" else -1.0
+
+    alive = jnp.arange(n0)
+    rungs = []
+    for fid in fidelities:
+        cand = _take(params, alive)
+        cand[fidelity_knob] = jnp.full(
+            (alive.shape[0],), fid,
+            dtype=getattr(template.policy, fidelity_knob).dtype,
+        )
+        batched = build_campaign(template, cand,
+                                 instantiate=instantiate, key=k_inst)
+        out = run_campaign(batched, chunk_size=chunk, mesh=mesh, axis=axis,
+                           reduce=reducer)
+        values = out["values"][: alive.shape[0]]
+        rungs.append({"fidelity": fid, "candidates": alive,
+                      "values": values})
+        order = jnp.argsort(sign * values)
+        keep = max(alive.shape[0] // eta, 1)
+        alive = alive[order[:keep]]
+    best = int(alive[0])
+    return {"params": params,
+            "best_params": _take(params, best),
+            "best_value": rungs[-1]["values"][int(jnp.argmin(
+                sign * rungs[-1]["values"]))],
+            "best_index": best, "rungs": rungs}

@@ -217,6 +217,29 @@ def input_pspec_tree(specs, mesh, strategy: str = "2d"):
     return _pspec_tree(specs, mesh, strategy, _INPUT_RULES)
 
 
+def campaign_pspec_tree(batched, mesh, axis: str = "data"):
+    """PartitionSpec tree sharding a stacked-Scenario campaign's leading
+    batch axis over ``mesh[axis]``, every other dimension replicated.
+
+    Reuses the same divisibility fallback as the model rule tables
+    (``_resolve_dim``): a leading dimension ``mesh[axis]`` does not divide
+    resolves to ``None`` (replicated), which ``core/campaign.py`` treats as
+    a hard error for the campaign axis — silently replicating a million-row
+    sweep onto every device is never what a caller wants.  Works on arrays
+    and on ``jax.eval_shape`` trees alike (only ``.shape`` is read).
+    """
+    sizes = _axis_sizes(mesh)
+
+    def spec(leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        entry = _resolve_dim(shape[0], (axis,), sizes, set())
+        return P(entry, *([None] * (len(shape) - 1)))
+
+    return jax.tree.map(spec, batched)
+
+
 def named(mesh, pspec_tree):
     """PartitionSpec tree -> NamedSharding tree on a concrete mesh."""
     return jax.tree.map(

@@ -1,0 +1,153 @@
+"""Streaming reductions: folded summaries vs the materialized [N, ...]
+reference on a 1024-point grid — bitwise for integer folds (counts,
+histogram bins, argbest, values tables), tolerance-bounded for float means
+and percentile sketches; chunk-size invariance; the sharded fold path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import run_campaign, scenarios, stack_scenarios
+from repro.core.reducers import (
+    ArgBestReducer,
+    HistogramReducer,
+    MeanReducer,
+    SumReducer,
+    ValuesReducer,
+)
+
+pytestmark = [
+    pytest.mark.tier1,
+    pytest.mark.filterwarnings("error:Some donated buffers were not usable"),
+]
+
+N = 1024
+HIST_LO, HIST_HI, HIST_BINS = 0.0, 8000.0, 64
+
+# one reducer dict reused everywhere: reducers are static jit args, so every
+# test folding with these at the same chunk size shares ONE compiled program
+REDUCE = {
+    "events": SumReducer("n_events"),
+    "mt": MeanReducer("mean_turnaround"),
+    "hist": HistogramReducer("mean_turnaround", HIST_LO, HIST_HI,
+                             bins=HIST_BINS, qs=(0.5, 0.9, 0.99)),
+    "best": ArgBestReducer("mean_turnaround"),
+    "vals": ValuesReducer("mean_turnaround", n_slots=N),
+}
+
+
+@pytest.fixture(scope="module")
+def grid():
+    """1024-point fig4 grid: policy combos x workload scale, with the
+    materialized reference results."""
+    base = [scenarios.fig4_scenario(hp, vp) for hp in (0, 1) for vp in (0, 1)]
+    rows = [
+        s.replace(cloudlets=s.cloudlets.replace(
+            length_mi=s.cloudlets.length_mi * (1.0 + 0.02 * (i % 37))
+        ))
+        for i, s in enumerate(base * (N // 4))
+    ]
+    batched = stack_scenarios(rows)
+    ref = run_campaign(batched, chunk_size=128)
+    return batched, ref
+
+
+def _ref_hist_counts(values):
+    width = (HIST_HI - HIST_LO) / HIST_BINS
+    idx = np.clip(((values - HIST_LO) / width).astype(np.int32),
+                  0, HIST_BINS - 1)
+    return np.bincount(idx, minlength=HIST_BINS).astype(np.int32)
+
+
+def test_folded_matches_materialized(grid):
+    batched, ref = grid
+    out = run_campaign(batched, chunk_size=128, reduce=REDUCE)
+    mt = np.array(ref.mean_turnaround)
+
+    # integer folds are bitwise
+    assert int(out["events"]) == int(np.array(ref.n_events).sum())
+    np.testing.assert_array_equal(np.array(out["vals"]["values"]), mt)
+    assert bool(out["vals"]["filled"].all())
+    np.testing.assert_array_equal(np.array(out["hist"]["counts"]),
+                                  _ref_hist_counts(mt))
+
+    # argbest: value + index + the winning policy row itself
+    best = int(np.argmin(mt))
+    assert int(out["best"]["index"]) == best
+    assert float(out["best"]["value"]) == mt[best]
+    want_row = jax.tree.map(lambda l: l[best], batched.policy)
+    for got, want in zip(jax.tree.leaves(out["best"]["policy"]),
+                         jax.tree.leaves(want_row)):
+        np.testing.assert_array_equal(np.array(got), np.array(want))
+
+    # float mean/std to rounding; histogram quantiles to one bin width
+    assert int(out["mt"]["n"]) == N
+    np.testing.assert_allclose(float(out["mt"]["mean"]), mt.mean(), rtol=1e-5)
+    np.testing.assert_allclose(float(out["mt"]["std"]), mt.std(), rtol=1e-3)
+    width = (HIST_HI - HIST_LO) / HIST_BINS
+    for q in (0.5, 0.9, 0.99):
+        assert abs(float(out["hist"][f"q{q:g}"]) - np.quantile(mt, q)) <= width
+
+
+def test_chunk_size_invariance(grid):
+    """Integer folds must be bitwise identical for any chunking — including
+    a ragged trailing chunk (1024 = 5*192 + 64)."""
+    batched, _ = grid
+    a = run_campaign(batched, chunk_size=128, reduce=REDUCE)
+    b = run_campaign(batched, chunk_size=192, reduce=REDUCE)
+    assert int(a["events"]) == int(b["events"])
+    np.testing.assert_array_equal(np.array(a["vals"]["values"]),
+                                  np.array(b["vals"]["values"]))
+    np.testing.assert_array_equal(np.array(a["hist"]["counts"]),
+                                  np.array(b["hist"]["counts"]))
+    assert int(a["best"]["index"]) == int(b["best"]["index"])
+    assert float(a["best"]["value"]) == float(b["best"]["value"])
+    np.testing.assert_allclose(float(a["mt"]["mean"]), float(b["mt"]["mean"]),
+                               rtol=1e-6)
+
+
+def test_sharded_fold_matches(grid):
+    """The shard_map fold on a 1-device mesh is bitwise the local fold."""
+    from jax.sharding import Mesh
+
+    batched, ref = grid
+    mesh = Mesh(jax.devices()[:1], ("data",))
+    out = run_campaign(batched, chunk_size=128, mesh=mesh, reduce=REDUCE)
+    np.testing.assert_array_equal(np.array(out["vals"]["values"]),
+                                  np.array(ref.mean_turnaround))
+    np.testing.assert_array_equal(
+        np.array(out["hist"]["counts"]),
+        _ref_hist_counts(np.array(ref.mean_turnaround)),
+    )
+    assert int(out["best"]["index"]) == int(np.argmin(
+        np.array(ref.mean_turnaround)))
+
+
+def test_single_reducer_form():
+    """A bare reducer (not a dict) returns its summary directly."""
+    batched = stack_scenarios([scenarios.fig4_scenario(0, 0)] * 4)
+    out = run_campaign(batched, reduce=SumReducer("n_finished"))
+    assert int(out) == 4 * 8
+
+
+def test_argbest_max_mode(grid):
+    batched, ref = grid
+    out = run_campaign(batched, chunk_size=128,
+                       reduce=ArgBestReducer("mean_turnaround", mode="max"))
+    mt = np.array(ref.mean_turnaround)
+    assert int(out["index"]) == int(np.argmax(mt))
+    assert float(out["value"]) == mt.max()
+
+
+def test_reducer_validation():
+    batched = stack_scenarios([scenarios.fig4_scenario(0, 0)] * 2)
+    with pytest.raises(ValueError, match="unknown SimResult field"):
+        run_campaign(batched, reduce=SumReducer("not_a_field"))
+    with pytest.raises(ValueError, match="one scalar per scenario row"):
+        run_campaign(batched, reduce=SumReducer(lambda r: r.turnaround))
+    with pytest.raises(ValueError, match="empty histogram range"):
+        HistogramReducer("makespan", 1.0, 1.0)
+    with pytest.raises(ValueError, match="mode"):
+        ArgBestReducer("makespan", mode="best")
+    with pytest.raises(TypeError, match="CampaignReducer"):
+        run_campaign(batched, reduce={"x": jnp.sum})
