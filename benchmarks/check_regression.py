@@ -4,7 +4,7 @@
         --baseline BENCH_baseline.json \
         --fresh BENCH_engine.json BENCH_event_engine.json \
                 BENCH_migration.json BENCH_reliability.json \
-                BENCH_campaign.json
+                BENCH_campaign.json BENCH_network.json
 
 Merges the fresh reports (top-level sections are disjoint by construction:
 ``benchmarks/engine_sweep.py``, ``benchmarks/event_engine.py``,
@@ -32,6 +32,12 @@ updates together — see the baseline's ``_note`` key):
 * ``campaign_sharded.sharded.scenarios_per_s`` — the same sweep through the
                                                  shard_map chunk runner
                                                  (1-device mesh on CPU CI)
+* ``network_transfer_single.jnp.transfers_per_s`` — staging-heavy fair-share
+                                                 link-ledger event loop
+                                                 (DESIGN.md §13)
+* ``network_transfer_batch.batch_major.transfers_per_s`` — the same subject
+                                                 as a B=32 locality-knob
+                                                 campaign (batch-major)
 
 Only the jnp path gates: the Pallas twin runs in interpret mode on CPU CI,
 so its wall time is a correctness seat, not a perf claim (DESIGN.md §4).
@@ -57,6 +63,8 @@ GATED = (
     ("reliability_sweep", "jnp", "scenarios_per_s"),
     ("campaign_streaming", "streaming", "scenarios_per_s"),
     ("campaign_sharded", "sharded", "scenarios_per_s"),
+    ("network_transfer_single", "jnp", "transfers_per_s"),
+    ("network_transfer_batch", "batch_major", "transfers_per_s"),
 )
 
 
@@ -103,7 +111,8 @@ def main(argv=None) -> int:
                     default=["BENCH_engine.json", "BENCH_event_engine.json",
                              "BENCH_migration.json",
                              "BENCH_reliability.json",
-                             "BENCH_campaign.json"],
+                             "BENCH_campaign.json",
+                             "BENCH_network.json"],
                     help="fresh report(s); top-level sections are merged")
     ap.add_argument("--tol", type=float, default=0.5,
                     help="fail when fresh/baseline falls below this ratio")

@@ -1,0 +1,119 @@
+"""Contention-aware network transfers (DESIGN.md §13).
+
+Beyond-paper rows for the abstract's network-topology future work made
+operational: a staging-heavy scenario (every cloudlet's input data moves
+over the inter-DC link ledger under fair sharing) timed through the single
+event loop and through a batch-major campaign sweeping the
+``locality_dispatch`` broker knob inside one compiled program.  The gated
+numbers are ``network_transfer_single.jnp.transfers_per_s`` and
+``network_transfer_batch.batch_major.transfers_per_s``
+(``benchmarks/check_regression.py`` vs ``BENCH_baseline.json``).
+
+    PYTHONPATH=src python -m benchmarks.network_transfer
+
+Writes ``BENCH_network.json``.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core import broadcast_campaign, run_campaign, scenarios, simulate
+
+OUT_PATH = "BENCH_network.json"
+
+
+def _staging(n_cloudlets: int, locality: bool = False):
+    return scenarios.staging_scenario(
+        n_cloudlets=n_cloudlets, vms_per_dc=4, wave=16,
+        locality_dispatch=locality)
+
+
+def bench_single(n_cloudlets: int = 192, n_rep: int = 5) -> dict:
+    """One staging-heavy scenario through the event loop: every cloudlet
+    stages input over the link ledger, so events/transfers per second price
+    the settle/open/re-time machinery itself."""
+    fn = jax.jit(simulate)
+    out = {}
+    for name, locality in (("jnp", False), ("locality", True)):
+        scn = _staging(n_cloudlets, locality)
+        res = fn(scn)                                 # compile + warm
+        jax.block_until_ready(res)
+        t0 = time.perf_counter()
+        for _ in range(n_rep):
+            res = fn(scn)
+            jax.block_until_ready(res)
+        wall = (time.perf_counter() - t0) / n_rep
+        assert int(res.n_finished) == n_cloudlets
+        out[name] = {
+            "n_transfers": n_cloudlets,
+            "n_events": int(res.n_events),
+            "wall_s": wall,
+            "transfers_per_s": n_cloudlets / wall,
+            "events_per_s": int(res.n_events) / wall,
+            "makespan_s": float(res.makespan),
+        }
+    return out
+
+
+def bench_batch(n_cloudlets: int = 96, batch: int = 32,
+                n_rep: int = 3) -> dict:
+    """The campaign surface: B scenario rows alternating the traced
+    ``locality_dispatch`` knob through the batch-major step loop."""
+    template = _staging(n_cloudlets)
+    loc = (np.arange(batch) % 2).astype(bool)
+    pol = jax.vmap(
+        lambda on: template.policy.replace(locality_dispatch=on)
+    )(loc)
+    batched = broadcast_campaign(template, batch, policy=pol)
+
+    res = run_campaign(batched)                       # compile + warm
+    jax.block_until_ready(res)
+    t0 = time.perf_counter()
+    for _ in range(n_rep):
+        res = run_campaign(batched)
+        jax.block_until_ready(res)
+    wall = (time.perf_counter() - t0) / n_rep
+    fin = np.array(res.n_finished)
+    mk = np.array(res.makespan)
+    return {
+        "batch_major": {
+            "batch": batch,
+            "n_transfers": batch * n_cloudlets,
+            "wall_s": wall,
+            "transfers_per_s": batch * n_cloudlets / wall,
+        },
+        "all_finished": bool((fin == n_cloudlets).all()),
+        "makespan_rank_s": float(mk[~loc].mean()),
+        "makespan_locality_s": float(mk[loc].mean()),
+    }
+
+
+def run() -> dict:
+    return {
+        "backend": jax.default_backend(),
+        "network_transfer_single": bench_single(),
+        "network_transfer_batch": bench_batch(),
+    }
+
+
+def main() -> None:
+    report = run()
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {OUT_PATH}")
+    s = report["network_transfer_single"]
+    print(f"network,single,transfers_per_s={s['jnp']['transfers_per_s']:.1f},"
+          f"events_per_s={s['jnp']['events_per_s']:.1f}")
+    print(f"network,locality,makespan_rank={s['jnp']['makespan_s']:.1f},"
+          f"makespan_locality={s['locality']['makespan_s']:.1f}")
+    b = report["network_transfer_batch"]
+    print(f"network,batch,B={b['batch_major']['batch']},"
+          f"transfers_per_s={b['batch_major']['transfers_per_s']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -161,17 +161,25 @@ class LintContext:
         return entry in self.allowed
 
     # -- scenarios ---------------------------------------------------------
+    @staticmethod
+    def _with_topology(scn):
+        """Attach a 1-DC uniform topology so the transfer phase
+        (step.SCOPE_TRANSFER) exists in every linted program — all lint
+        scenarios carry it, keeping R5's structure-identity probe intact."""
+        import dataclasses
+
+        from repro.core.energy import Topology
+        return dataclasses.replace(scn, topology=Topology.uniform(1))
+
     def scenario(self, **kw):
         """The canonical single-scenario lint subject (paper Figure 4)."""
         from repro.core import scenarios
         from repro.core.entities import SPACE_SHARED
         key = ("scn", tuple(sorted(kw.items())))
         if key not in self._cache:
-            self._cache[key] = scenarios.fig4_scenario(
-                SPACE_SHARED, SPACE_SHARED
-            ).replace(**kw) if kw else scenarios.fig4_scenario(
-                SPACE_SHARED, SPACE_SHARED
-            )
+            base = self._with_topology(
+                scenarios.fig4_scenario(SPACE_SHARED, SPACE_SHARED))
+            self._cache[key] = base.replace(**kw) if kw else base
         return self._cache[key]
 
     def scenario_variant(self):
@@ -180,9 +188,9 @@ class LintContext:
         from repro.core import scenarios
         from repro.core.entities import TIME_SHARED
         if "scn_variant" not in self._cache:
-            self._cache["scn_variant"] = scenarios.fig4_scenario(
-                TIME_SHARED, TIME_SHARED, length_mi=1000.0
-            )
+            self._cache["scn_variant"] = self._with_topology(
+                scenarios.fig4_scenario(
+                    TIME_SHARED, TIME_SHARED, length_mi=1000.0))
         return self._cache["scn_variant"]
 
     def batch_scenario(self):
@@ -191,9 +199,9 @@ class LintContext:
         from repro.core.entities import SPACE_SHARED
         if "scn_batch" not in self._cache:
             rows = [
-                scenarios.fig4_scenario(
+                self._with_topology(scenarios.fig4_scenario(
                     SPACE_SHARED, SPACE_SHARED, length_mi=float(m)
-                )
+                ))
                 for m in (1000.0, 2000.0, 3000.0, 4000.0)[:_BATCH]
             ]
             self._cache["scn_batch"] = campaign.stack_scenarios(rows)

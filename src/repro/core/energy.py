@@ -48,9 +48,23 @@ class PowerModel:
 
 @pytree_dataclass
 class Topology:
-    """Inter-DC link parameters, [D, D] each (diagonal = intra-DC)."""
+    """Inter-DC link parameters, [D, D] each (diagonal = intra-DC).
+
+    The single bandwidth surface for every inter-DC byte: migration images,
+    evacuations, and cloudlet data staging all draw from these links through
+    the ``SimState.link_busy`` / ``link_share`` ledger (DESIGN.md §13).
+    """
     latency_s: Array
     bw_mbps: Array
+
+    def fair_share(self, busy: Array) -> Array:
+        """[D, D] Mbps each active transfer receives under fair sharing.
+
+        ``busy`` is the per-link active-transfer count; an idle link grants
+        its full capacity (``bw / max(busy, 1)``), so a lone transfer is
+        bitwise-identical to the uncontended point-to-point divisor.
+        """
+        return self.bw_mbps / jnp.maximum(busy, 1).astype(jnp.float32)
 
     @staticmethod
     def uniform(n_dc: int, latency_s: float = 0.05, bw_mbps: float = 100.0):
@@ -169,7 +183,22 @@ def power_draw(
     return jnp.sum(watts, axis=1)
 
 
-def migration_delay_matrix(scn: Scenario, image_mb: Array) -> Array:
-    """[D, D] seconds to move a VM image between DC pairs under the topology."""
+def migration_delay_matrix(
+    scn: Scenario, image_mb: Array, policy=None
+) -> Array:
+    """[D, D] seconds to move a VM image between DC pairs under the topology.
+
+    Includes ``Policy.migration_fixed_s`` (the VM re-creation latency), so the
+    matrix agrees exactly with the uncontended delay the engine charges when a
+    migration commits (provision.py) — analysis and placement consumers used
+    to underestimate every move by the fixed term.  ``policy`` defaults to
+    ``scn.policy``; pass one explicitly to price moves under a different knob
+    setting without rebuilding the scenario.
+    """
     topo: Topology = scn.topology         # type: ignore[attr-defined]
-    return topo.latency_s + image_mb / jnp.maximum(topo.bw_mbps, 1e-6)
+    pol = scn.policy if policy is None else policy
+    return (
+        pol.migration_fixed_s
+        + topo.latency_s
+        + image_mb / jnp.maximum(topo.bw_mbps, 1e-6)
+    )

@@ -61,6 +61,15 @@ def init_state(scn: Scenario) -> SimState:
     D, H = hosts.cores.shape
     V, C = vms.n_vms, cls.n_cloudlets
     f32, i32 = jnp.float32, jnp.int32
+    ready0 = jnp.where(cls.vm >= 0, step_mod.ready_times(scn), INF)
+    if scn.topology is not None:
+        # network stage-ins (input_dc >= 0) wait for the transfer phase to
+        # open them on the link ledger (DESIGN.md §13); an idle ledger grants
+        # each link its full bandwidth to its first transfer
+        ready0 = jnp.where(cls.input_dc >= 0, INF, ready0)
+        link_share0 = jnp.asarray(scn.topology.bw_mbps, f32)
+    else:
+        link_share0 = jnp.zeros((D, D), f32)
     return SimState(
         t=jnp.asarray(0.0, f32),
         step=jnp.asarray(0, i32),
@@ -82,7 +91,7 @@ def init_state(scn: Scenario) -> SimState:
         free_bw=jnp.where(hosts.exists, hosts.bw_mbps, 0.0),
         free_cores=jnp.where(hosts.exists, hosts.cores.astype(f32), 0.0),
         cl_vm=cls.vm.astype(i32),
-        cl_ready_t=jnp.where(cls.vm >= 0, step_mod.ready_times(scn), INF),
+        cl_ready_t=ready0,
         rem_mi=jnp.where(cls.exists, cls.length_mi, 0.0),
         cl_rollback_mi=jnp.zeros((C,), f32),
         started=jnp.zeros((C,), bool),
@@ -98,6 +107,15 @@ def init_state(scn: Scenario) -> SimState:
         energy_j=jnp.zeros((D,), f32),
         vm_downtime=jnp.zeros((V,), f32),
         n_evacuations=jnp.asarray(0, i32),
+        link_busy=jnp.zeros((D, D), i32),
+        link_share=link_share0,
+        vm_xfer_src=jnp.full((V,), -1, i32),
+        vm_xfer_dst=jnp.full((V,), -1, i32),
+        vm_xfer_rem=jnp.zeros((V,), f32),
+        vm_xfer_share=jnp.zeros((V,), f32),
+        cl_xfer_dst=jnp.full((C,), -1, i32),
+        cl_xfer_rem=jnp.zeros((C,), f32),
+        cl_xfer_share=jnp.zeros((C,), f32),
     )
 
 

@@ -94,6 +94,14 @@ class Cloudlets:
     ``deadline`` is the per-cloudlet SLA: the absolute sim time by which the
     row must finish (INF = no guarantee).  A row violates its SLA when it
     finishes later — or never finishes at all (DESIGN.md §9).
+
+    ``input_dc >= 0`` declares where the row's ``input_mb`` lives: the image
+    must be staged from that datacenter to the assigned VM's DC before
+    execution.  Under a ``Scenario.topology`` the stage-in becomes a real
+    network transfer drawing fair-share bandwidth from the link ledger
+    (DESIGN.md §13); without a topology it bills the flat
+    ``Policy.interdc_bw_mbps`` divisor when remote.  ``input_dc == -1`` keeps
+    the legacy VM-local stage-in (``input_mb / vm_bw``).
     """
 
     vm: Array         # [C] i32  target VM (-1: broker-dispatched at submit)
@@ -101,6 +109,7 @@ class Cloudlets:
     cores: Array      # [C] i32
     submit_t: Array   # [C] f32
     input_mb: Array   # [C] f32  staged in before execution (SAN transfer)
+    input_dc: Array   # [C] i32  datacenter holding the input data (-1: VM-local)
     output_mb: Array  # [C] f32  staged out at completion
     deadline: Array   # [C] f32  absolute SLA finish time (INF: none)
     exists: Array     # [C] bool
@@ -185,6 +194,12 @@ class Policy:
                               #   drains doomed hosts to federation peers
     evac_lead_s: Array        # scalar f32: evacuation alarm this long before
                               #   each scheduled host failure
+    # --- contention-aware network layer, DESIGN.md §13 ---
+    locality_dispatch: Array  # scalar bool: broker weighs estimated stage-in
+                              #   transfer time against queue depth when
+                              #   choosing a VM for service-routed cloudlets
+                              #   (needs Scenario.topology; False keeps the
+                              #   least-loaded rank dispatch bitwise)
 
 
 @pytree_dataclass(static=("max_steps", "sweep_impl"))
@@ -271,6 +286,24 @@ class SimState:
     # --- reliability accounting (0 unless Scenario.outages is set) ---
     vm_downtime: Array   # [V] f32 seconds spent evicted/awaiting recovery
     n_evacuations: Array # scalar i32 proactive drains committed
+    # --- contention-aware transfer ledger (idle unless Scenario.topology is
+    #     set; fixed [D,D]/[V]/[C] shapes so one compiled program serves
+    #     topology campaigns, DESIGN.md §13) ---
+    link_busy: Array     # [D,D] i32 active transfers per directed DC link
+    link_share: Array    # [D,D] f32 fair-share Mbps granted per transfer at
+                         #           the last transfer-phase recompute
+                         #           (bw / max(busy, 1); doubles as the
+                         #           occupancy-change detector)
+    vm_xfer_src: Array   # [V] i32 source DC of the VM's in-flight image
+                         #         transfer (-1: no active transfer)
+    vm_xfer_dst: Array   # [V] i32 destination DC of that transfer (pinned at
+                         #         commit: eviction may reset vm_dc before the
+                         #         ledger slot is freed)
+    vm_xfer_rem: Array   # [V] f32 MB still to move as of the last recompute
+    vm_xfer_share: Array # [V] f32 Mbps this transfer currently receives
+    cl_xfer_dst: Array   # [C] i32 destination DC of the cloudlet's in-flight
+    cl_xfer_rem: Array   # [C] f32   stage-in transfer (-1 / MB / Mbps,
+    cl_xfer_share: Array # [C] f32   mirroring the VM transfer columns)
 
 
 @pytree_dataclass

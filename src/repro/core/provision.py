@@ -233,9 +233,16 @@ def provision_due_vms(scn: Scenario, state: SimState) -> tuple[SimState, Array]:
         BIG = jnp.float32(1e9)
         peer_score = st.sensed_load
         if scn.topology is not None:
+            # Normalize over *finite* latencies only: an INF entry marks a
+            # disconnected link, and INF/INF would poison the whole dc_key
+            # row with NaN (argmin then lands on the NaN, rejecting feasible
+            # peers).  Disconnected peers get a flat worst-case penalty but
+            # stay selectable as a last resort.
             lat = scn.topology.latency_s[origin]             # [D]
-            peer_score = peer_score + lat / jnp.maximum(
-                jnp.max(lat), 1e-9
+            lat_ok = jnp.isfinite(lat)
+            lat_max = jnp.max(jnp.where(lat_ok, lat, 0.0))
+            peer_score = peer_score + jnp.where(
+                lat_ok, lat / jnp.maximum(lat_max, 1e-9), 2.0
             )
         dc_key = jnp.where(
             is_origin & dc_slot,
@@ -269,20 +276,30 @@ def provision_due_vms(scn: Scenario, state: SimState) -> tuple[SimState, Array]:
         hsel = jnp.argmin(host_key)
 
         migrated = found & (dsel != origin)
+        w = found.astype(jnp.float32)
+        # Guard the gather indices exactly as live_migrate does: with no
+        # feasible peer, dsel is whatever argmin returned over an all-BIG
+        # (or NaN-poisoned) key row — never index the topology with it.
+        dsafe = jnp.where(found, dsel, 0)
+        hsafe = jnp.where(found, hsel, 0)
         if scn.topology is not None:
+            # The image draws fair-share bandwidth from the (origin, dsafe)
+            # link ledger: an idle link grants full capacity (bitwise the old
+            # uncontended divisor), a busy one splits it k+1 ways.  The
+            # transfer phase re-times every transfer already on the link
+            # (DESIGN.md §13).
+            share0 = scn.topology.bw_mbps[origin, dsafe] / (
+                st.link_busy[origin, dsafe] + 1
+            ).astype(jnp.float32)
             delay = (
                 pol.migration_fixed_s
-                + scn.topology.latency_s[origin, dsel]
-                + vms.image_mb[v] / jnp.maximum(
-                    scn.topology.bw_mbps[origin, dsel], 1e-6)
+                + scn.topology.latency_s[origin, dsafe]
+                + vms.image_mb[v] / jnp.maximum(share0, 1e-6)
             )
         else:
             delay = pol.migration_fixed_s + vms.image_mb[v] / jnp.maximum(
                 pol.interdc_bw_mbps, 1e-6
             )
-        w = found.astype(jnp.float32)
-        dsafe = jnp.where(found, dsel, 0)
-        hsafe = jnp.where(found, hsel, 0)
 
         # Pool activations pay the usual fixed VM-creation latency (the image
         # must boot); ordinary rows are created instantly at home, as before.
@@ -323,6 +340,20 @@ def provision_due_vms(scn: Scenario, state: SimState) -> tuple[SimState, Array]:
                 * scn.market.cost_per_bw_mb[dsafe]
             ),
         )
+        if scn.topology is not None:
+            # open the image transfer on the link ledger
+            st = st.replace(
+                link_busy=st.link_busy.at[origin, dsafe].add(
+                    migrated.astype(jnp.int32)),
+                vm_xfer_src=st.vm_xfer_src.at[v].set(
+                    jnp.where(migrated, origin, st.vm_xfer_src[v])),
+                vm_xfer_dst=st.vm_xfer_dst.at[v].set(
+                    jnp.where(migrated, dsafe, st.vm_xfer_dst[v])),
+                vm_xfer_rem=st.vm_xfer_rem.at[v].set(
+                    jnp.where(migrated, vms.image_mb[v], st.vm_xfer_rem[v])),
+                vm_xfer_share=st.vm_xfer_share.at[v].set(
+                    jnp.where(migrated, share0, st.vm_xfer_share[v])),
+            )
         return st, found
 
     state, placed = jax.lax.scan(
@@ -379,11 +410,27 @@ def live_migrate(
     dsafe = jnp.where(found, dst_dc, 0)
     hsafe = jnp.where(found, h, 0)
     if scn.topology is not None:
+        # fair share on the (src, dst) link: full capacity when idle (bitwise
+        # the old point-to-point divisor), split k+1 ways when contended
+        share0 = scn.topology.bw_mbps[src_d, dsafe] / (
+            state.link_busy[src_d, dsafe] + 1
+        ).astype(jnp.float32)
         delay = (
             pol.migration_fixed_s
             + scn.topology.latency_s[src_d, dsafe]
-            + vms.image_mb[v] / jnp.maximum(
-                scn.topology.bw_mbps[src_d, dsafe], 1e-6)
+            + vms.image_mb[v] / jnp.maximum(share0, 1e-6)
+        )
+        state = state.replace(
+            link_busy=state.link_busy.at[src_d, dsafe].add(
+                found.astype(jnp.int32)),
+            vm_xfer_src=state.vm_xfer_src.at[v].set(
+                jnp.where(found, src_d, state.vm_xfer_src[v])),
+            vm_xfer_dst=state.vm_xfer_dst.at[v].set(
+                jnp.where(found, dsafe, state.vm_xfer_dst[v])),
+            vm_xfer_rem=state.vm_xfer_rem.at[v].set(
+                jnp.where(found, vms.image_mb[v], state.vm_xfer_rem[v])),
+            vm_xfer_share=state.vm_xfer_share.at[v].set(
+                jnp.where(found, share0, state.vm_xfer_share[v])),
         )
     else:
         delay = pol.migration_fixed_s + vms.image_mb[v] / jnp.maximum(
@@ -435,26 +482,237 @@ def dispatch_cloudlets(scn: Scenario, state: SimState) -> SimState:
     one event's batch of arrivals spreads instead of piling onto one argmin.
     If nothing is eligible the rows stay unassigned and retry at the next
     event.  Assignments are permanent — no re-balancing of queued work.
+
+    Under ``Policy.locality_dispatch`` (topology required) the broker instead
+    scores every (cloudlet, VM) pair as queue seconds + estimated stage-in
+    transfer time at the link's current fair share, and takes the row argmin —
+    data gravity versus queue depth (DESIGN.md §13).
+
+    Stage-in pricing: ``input_dc == -1`` rows keep the legacy VM-local
+    divisor.  ``input_dc >= 0`` rows under a topology are *not* priced here —
+    their ``cl_ready_t`` stays INF and the transfer phase opens the ledger
+    transfer in this same event; without a topology they bill the flat
+    ``interdc_bw_mbps`` divisor when remote (VM-local bandwidth otherwise).
     """
-    cls, vms = scn.cloudlets, scn.vms
+    cls, vms, pol = scn.cloudlets, scn.vms, scn.policy
     V = vms.n_vms
+    D = scn.hosts.n_dc
     due = cls.exists & (state.cl_vm < 0) & (cls.submit_t <= state.t)
     eligible = eligible_dispatch_vms(scn, state)
     n_elig = jnp.sum(eligible.astype(jnp.int32))
 
     outstanding = policies.vm_outstanding_mi(scn, state)
     cap = jnp.maximum(vms.cores.astype(jnp.float32) * vms.mips, 1e-9)
-    load_key = jnp.where(eligible, outstanding / cap, INF)
+    queue_s = outstanding / cap
+    load_key = jnp.where(eligible, queue_s, INF)
     vm_order = jnp.argsort(load_key)                     # least-loaded first
 
     k = jnp.cumsum(due.astype(jnp.int32)) - 1            # rank among new rows
     chosen = vm_order[jnp.where(n_elig > 0, k % jnp.maximum(n_elig, 1), 0)]
+
+    if scn.topology is not None:
+        # Data-locality-aware broker: per-(cloudlet, VM) estimated transfer
+        # seconds at the link's *current* fair share (one more transfer
+        # joining), added to the VM's queue depth.  Selected via jnp.where so
+        # locality_dispatch=False keeps the rank dispatch bitwise.
+        topo = scn.topology
+        src = jnp.clip(cls.input_dc, 0, D - 1)                    # [C]
+        vdc = jnp.clip(state.vm_dc, 0, D - 1)                     # [V]
+        shr = topo.bw_mbps[src[:, None], vdc[None, :]] / (
+            state.link_busy[src[:, None], vdc[None, :]] + 1
+        ).astype(jnp.float32)                                     # [C, V]
+        est = topo.latency_s[src[:, None], vdc[None, :]] + (
+            cls.input_mb[:, None] / jnp.maximum(shr, 1e-6)
+        )
+        local = cls.input_mb[:, None] / jnp.maximum(
+            vms.bw_mbps[None, :], 1e-6
+        )
+        est = jnp.where((cls.input_dc >= 0)[:, None], est, local)
+        score = jnp.where(eligible[None, :], queue_s[None, :] + est, INF)
+        chosen_loc = jnp.argmin(score, axis=1).astype(chosen.dtype)
+        chosen = jnp.where(pol.locality_dispatch, chosen_loc, chosen)
+
     ok = due & (n_elig > 0)
     bw = jnp.maximum(vms.bw_mbps[jnp.clip(chosen, 0, V - 1)], 1e-6)
     stage_in = jnp.where(cls.input_mb > 0, cls.input_mb / bw, 0.0)
+    ready = state.t + stage_in
+    if scn.topology is not None:
+        # network rows wait for the transfer phase to open + price the move
+        ready = jnp.where(cls.input_dc >= 0, INF, ready)
+    else:
+        vdc_chosen = jnp.clip(
+            state.vm_dc[jnp.clip(chosen, 0, V - 1)], 0, D - 1
+        )
+        remote = (cls.input_dc >= 0) & (cls.input_dc != vdc_chosen)
+        ready = jnp.where(
+            remote,
+            state.t + cls.input_mb / jnp.maximum(pol.interdc_bw_mbps, 1e-6),
+            ready,
+        )
     return state.replace(
         cl_vm=jnp.where(ok, chosen, state.cl_vm),
-        cl_ready_t=jnp.where(ok, state.t + stage_in, state.cl_ready_t),
+        cl_ready_t=jnp.where(ok, ready, state.cl_ready_t),
+    )
+
+
+def _staging_due(scn: Scenario, state: SimState) -> Array:
+    """[C] network stage-ins ready to open at the current clock.
+
+    A row opens once it is submitted, bound to a placed VM, and neither
+    already in flight (``cl_xfer_dst >= 0``) nor already staged
+    (``cl_ready_t`` finite).  Topology-only helper.
+    """
+    cls = scn.cloudlets
+    vmi = jnp.clip(state.cl_vm, 0, scn.vms.n_vms - 1)
+    return (
+        cls.exists
+        & (cls.input_dc >= 0)
+        & (state.cl_vm >= 0)
+        & (state.cl_xfer_dst < 0)
+        & (state.cl_ready_t >= INF / 2)
+        & (cls.submit_t <= state.t)
+        & state.vm_placed[vmi]
+    )
+
+
+def settle_transfers(scn: Scenario, state: SimState) -> SimState:
+    """Close finished or cancelled transfers and free their link slots.
+
+    Runs at the top of every event (step prologue, topology only), *before*
+    instruments and phases: a transfer is closed when its completion time has
+    arrived (``<= t``) or was reset to INF mid-flight (the VM was evicted by
+    a host failure or released — the cancellation path), so the same VM can
+    immediately open a fresh transfer in this event without leaking its old
+    link slot.  A no-op (bitwise) when no transfer closes.
+    """
+    D = scn.hosts.n_dc
+    t = state.t
+    vm_close = (state.vm_xfer_src >= 0) & (
+        (state.vm_avail_t <= t) | (state.vm_avail_t >= INF / 2)
+    )
+    cl_close = (state.cl_xfer_dst >= 0) & (
+        (state.cl_ready_t <= t) | (state.cl_ready_t >= INF / 2)
+    )
+    sv = jnp.where(vm_close, jnp.clip(state.vm_xfer_src, 0, D - 1), 0)
+    dv = jnp.where(vm_close, jnp.clip(state.vm_xfer_dst, 0, D - 1), 0)
+    sc = jnp.where(cl_close, jnp.clip(scn.cloudlets.input_dc, 0, D - 1), 0)
+    dc_ = jnp.where(cl_close, jnp.clip(state.cl_xfer_dst, 0, D - 1), 0)
+    busy = state.link_busy.at[sv, dv].add(-vm_close.astype(jnp.int32))
+    busy = busy.at[sc, dc_].add(-cl_close.astype(jnp.int32))
+    return state.replace(
+        link_busy=busy,
+        vm_xfer_src=jnp.where(vm_close, -1, state.vm_xfer_src),
+        vm_xfer_dst=jnp.where(vm_close, -1, state.vm_xfer_dst),
+        vm_xfer_rem=jnp.where(vm_close, 0.0, state.vm_xfer_rem),
+        vm_xfer_share=jnp.where(vm_close, 0.0, state.vm_xfer_share),
+        cl_xfer_dst=jnp.where(cl_close, -1, state.cl_xfer_dst),
+        cl_xfer_rem=jnp.where(cl_close, 0.0, state.cl_xfer_rem),
+        cl_xfer_share=jnp.where(cl_close, 0.0, state.cl_xfer_share),
+    )
+
+
+def transfer_needed(scn: Scenario, state: SimState) -> Array:
+    """Scalar bool — the transfer phase has something to do this event."""
+    return (
+        jnp.any(_staging_due(scn, state))
+        | jnp.any(state.vm_xfer_src >= 0)
+        | jnp.any(state.cl_xfer_dst >= 0)
+    )
+
+
+def transfer_phase(scn: Scenario, state: SimState) -> SimState:
+    """Open due stage-in transfers and re-time in-flight transfers whose
+    links changed occupancy (the fair-share recompute, DESIGN.md §13).
+
+    Runs after provision/dispatch under a scalar ``lax.cond`` (topology
+    only).  The ledger invariant: ``link_share`` holds the per-transfer Mbps
+    granted at the last recompute, so ``fair_share(link_busy) != link_share``
+    detects exactly the links whose population changed since — settles in the
+    prologue, migration commits in provision, opens here.  Transfers on
+    unchanged links are left untouched (bitwise), which is what keeps
+    uncontended topology runs identical to the flat path.
+
+    Re-timing is analytic, not byte-stepped: a transfer's remaining window
+    ``w = done_t - t`` is a non-bandwidth head ``h`` (fixed latency not yet
+    elapsed) followed by a byte tail ``rem / share``; the new completion is
+    ``t + h + rem' / share_new`` with ``rem'`` the bytes left at the old
+    share.  Exact — k equal transfers sharing one link finish in exactly the
+    head plus k x the lone-transfer byte time.
+    """
+    topo = scn.topology
+    cls, vms = scn.cloudlets, scn.vms
+    D = scn.hosts.n_dc
+    t = state.t
+
+    # --- open due stage-ins, priced at the post-open share ---
+    opening = _staging_due(scn, state)
+    vmi = jnp.clip(state.cl_vm, 0, vms.n_vms - 1)
+    so = jnp.where(opening, jnp.clip(cls.input_dc, 0, D - 1), 0)
+    do = jnp.where(opening, jnp.clip(state.vm_dc[vmi], 0, D - 1), 0)
+    busy = state.link_busy.at[so, do].add(opening.astype(jnp.int32))
+    share_new = topo.fair_share(busy)                            # [D, D]
+
+    shr_o = share_new[so, do]
+    ready_o = (
+        t + topo.latency_s[so, do]
+        + cls.input_mb / jnp.maximum(shr_o, 1e-6)
+    )
+    cl_ready_t = jnp.where(opening, ready_o, state.cl_ready_t)
+    cl_xfer_dst = jnp.where(opening, do, state.cl_xfer_dst)
+    cl_xfer_rem = jnp.where(opening, cls.input_mb, state.cl_xfer_rem)
+    cl_xfer_share = jnp.where(opening, shr_o, state.cl_xfer_share)
+
+    changed = share_new != state.link_share                      # [D, D]
+
+    def retime(done_t, rem, own):
+        """New (done_t, rem) after a share change at the current clock."""
+        own = jnp.maximum(own, 1e-6)
+        w = done_t - t                   # remaining window at the old share
+        tail = rem / own                 # pure byte-transfer seconds of it
+        wb = jnp.minimum(w, tail)
+        head = w - wb                    # latency/fixed time still ahead
+        rem2 = jnp.where(wb < tail, own * wb, rem)
+        return head, rem2
+
+    # in-flight VM image transfers on changed links
+    act_v = state.vm_xfer_src >= 0
+    sv = jnp.clip(state.vm_xfer_src, 0, D - 1)
+    dv = jnp.clip(state.vm_xfer_dst, 0, D - 1)
+    hit_v = act_v & changed[sv, dv]
+    snew_v = jnp.maximum(share_new[sv, dv], 1e-6)
+    head_v, rem_v = retime(
+        state.vm_avail_t, state.vm_xfer_rem, state.vm_xfer_share
+    )
+    vm_avail_t = jnp.where(
+        hit_v, t + head_v + rem_v / snew_v, state.vm_avail_t
+    )
+    vm_xfer_rem = jnp.where(hit_v, rem_v, state.vm_xfer_rem)
+    vm_xfer_share = jnp.where(hit_v, snew_v, state.vm_xfer_share)
+
+    # in-flight stage-ins on changed links (the rows just opened above are
+    # excluded — they are already priced at share_new)
+    act_c = (state.cl_xfer_dst >= 0) & ~opening
+    sc = jnp.clip(cls.input_dc, 0, D - 1)
+    dc_ = jnp.clip(state.cl_xfer_dst, 0, D - 1)
+    hit_c = act_c & changed[sc, dc_]
+    snew_c = jnp.maximum(share_new[sc, dc_], 1e-6)
+    head_c, rem_c = retime(
+        state.cl_ready_t, state.cl_xfer_rem, state.cl_xfer_share
+    )
+    cl_ready_t = jnp.where(hit_c, t + head_c + rem_c / snew_c, cl_ready_t)
+    cl_xfer_rem = jnp.where(hit_c, rem_c, cl_xfer_rem)
+    cl_xfer_share = jnp.where(hit_c, snew_c, cl_xfer_share)
+
+    return state.replace(
+        link_busy=busy,
+        link_share=share_new,
+        vm_avail_t=vm_avail_t,
+        vm_xfer_rem=vm_xfer_rem,
+        vm_xfer_share=vm_xfer_share,
+        cl_ready_t=cl_ready_t,
+        cl_xfer_dst=cl_xfer_dst,
+        cl_xfer_rem=cl_xfer_rem,
+        cl_xfer_share=cl_xfer_share,
     )
 
 

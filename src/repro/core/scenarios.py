@@ -61,6 +61,7 @@ def make_policy(
     ckpt_interval: float = 3.0e38,
     evacuation: bool = False,
     evac_lead_s: float = 60.0,
+    locality_dispatch: bool = False,
 ) -> Policy:
     """Build a ``Policy`` from Python values, casting every knob to its
     traced array dtype.
@@ -94,6 +95,7 @@ def make_policy(
         ckpt_interval=jnp.asarray(ckpt_interval, jnp.float32),
         evacuation=jnp.asarray(evacuation, bool),
         evac_lead_s=jnp.asarray(evac_lead_s, jnp.float32),
+        locality_dispatch=jnp.asarray(locality_dispatch, bool),
     )
 
 
@@ -175,26 +177,35 @@ def make_cloudlets(
     length_mi: np.ndarray,
     submit_t: np.ndarray,
     cores: np.ndarray | int = 1,
-    input_mb: float = 0.3,
+    input_mb: float | np.ndarray = 0.3,
     output_mb: float = 0.3,
     deadline: np.ndarray | float = 3.0e38,
+    input_dc: int | np.ndarray = -1,
 ) -> Cloudlets:
     """Rows are re-sorted by (submit_t, row) — FCFS is row order downstream.
 
-    ``deadline`` is the absolute SLA finish time (default INF: none)."""
+    ``deadline`` is the absolute SLA finish time (default INF: none).
+    ``input_dc >= 0`` declares where the row's ``input_mb`` lives: the data
+    must be staged to the assigned VM's datacenter before execution — a real
+    fair-share link transfer under a ``Scenario.topology``, a flat
+    ``interdc_bw_mbps`` divisor without one (default -1: VM-local stage-in,
+    the legacy behavior)."""
     vm = np.asarray(vm, _I)
     n = vm.shape[0]
     length_mi = np.asarray(length_mi, _F)
     submit_t = np.broadcast_to(np.asarray(submit_t, _F), (n,))
     cores = np.broadcast_to(np.asarray(cores, _I), (n,))
     deadline = np.broadcast_to(np.asarray(deadline, _F), (n,))
+    input_mb = np.broadcast_to(np.asarray(input_mb, _F), (n,))
+    input_dc = np.broadcast_to(np.asarray(input_dc, _I), (n,))
     order = np.argsort(submit_t, kind="stable")
     return Cloudlets(
         vm=jnp.asarray(vm[order]),
         length_mi=jnp.asarray(length_mi[order]),
         cores=jnp.asarray(cores[order]),
         submit_t=jnp.asarray(submit_t[order]),
-        input_mb=jnp.full((n,), input_mb, _F),
+        input_mb=jnp.asarray(input_mb[order]),
+        input_dc=jnp.asarray(input_dc[order]),
         output_mb=jnp.full((n,), output_mb, _F),
         deadline=jnp.asarray(deadline[order]),
         exists=jnp.ones((n,), bool),
@@ -632,3 +643,47 @@ def balance_scenario(*, live_migration: bool = True,
                     market=uniform_market(2), policy=pol,
                     instruments=(MigrationInstrument(),),
                     max_steps=max_steps)
+
+
+def staging_scenario(*, n_dc: int = 3, hosts_per_dc: int = 2,
+                     vms_per_dc: int = 2, n_cloudlets: int = 48,
+                     wave: int = 8, wave_dt: float = 2.0,
+                     input_mb: float = 256.0, task_mi: float = 20_000.0,
+                     bw_mbps: float = 100.0, latency_s: float = 0.05,
+                     locality_dispatch: bool = False,
+                     horizon: float = 1e6) -> Scenario:
+    """Data-staging-heavy demo of the contention-aware network layer
+    (DESIGN.md §13): service-routed cloudlets whose ``input_mb`` lives on a
+    declared ``input_dc`` arrive in waves of ``wave``, so many stage-in
+    transfers overlap on the inter-DC links and fair sharing governs every
+    completion time.
+
+    ``locality_dispatch`` flips the broker between least-loaded rank
+    dispatch and the data-gravity score (queue depth + estimated transfer
+    seconds at current link occupancy) inside one compiled program — the
+    knob is traced, so a campaign sweeps it.
+    """
+    from repro.core.energy import Topology
+
+    n_vms = n_dc * vms_per_dc
+    hosts = uniform_hosts(n_dc, hosts_per_dc, cores=4, mips=1000.0,
+                          ram_mb=8192.0, storage_mb=2_000_000.0)
+    vms = uniform_vms(n_vms, dc=np.arange(n_vms) % n_dc, cores=1,
+                      mips=1000.0, ram_mb=256.0, storage_mb=1024.0,
+                      image_mb=1024.0)
+    submit = (np.arange(n_cloudlets) // wave) * wave_dt
+    cls = make_cloudlets(
+        np.full(n_cloudlets, -1), np.full(n_cloudlets, task_mi), submit,
+        input_mb=input_mb, output_mb=0.0,
+        input_dc=np.arange(n_cloudlets) % n_dc,
+    )
+    pol = make_policy(horizon=horizon, interdc_bw_mbps=bw_mbps,
+                      locality_dispatch=locality_dispatch)
+    max_steps = 6 * n_cloudlets + 4 * n_vms + 300
+    return Scenario(
+        hosts=hosts, vms=vms, cloudlets=cls, market=uniform_market(n_dc),
+        policy=pol,
+        topology=Topology.uniform(n_dc, latency_s=latency_s,
+                                  bw_mbps=bw_mbps),
+        max_steps=max_steps,
+    )

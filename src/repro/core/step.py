@@ -52,6 +52,7 @@ K_HORIZON = 6      # the simulation horizon
 K_SCALE = 7        # an autoscaler evaluation tick (AutoscaleInstrument)
 K_FAILURE = 8      # a scheduled host failure (Scenario.outages)
 K_REPAIR = 9       # a failed host came back (empty)
+K_STAGE = 10       # a pending data stage-in became openable (topology only)
 
 # Named scopes wrapping the phase-skip ``lax.cond``s.  The names land in the
 # optimized HLO's op metadata (``op_name=.../phase_provision/cond``), which is
@@ -60,7 +61,10 @@ K_REPAIR = 9       # a failed host came back (empty)
 # (the vmap degradation that silently pays both branches, DESIGN.md §10/§11).
 SCOPE_PROVISION = "phase_provision"
 SCOPE_DISPATCH = "phase_dispatch"
-PHASE_SCOPES = (SCOPE_PROVISION, SCOPE_DISPATCH)
+SCOPE_TRANSFER = "phase_transfer"
+# SCOPE_TRANSFER only exists in programs traced with a topology attached;
+# simlint's lint scenarios carry one so R1 covers all three phases.
+PHASE_SCOPES = (SCOPE_PROVISION, SCOPE_DISPATCH, SCOPE_TRANSFER)
 
 
 def default_max_steps(scn: Scenario) -> int:
@@ -75,6 +79,11 @@ def default_max_steps(scn: Scenario) -> int:
     if scn.outages is not None:
         n_out = int(scn.outages.fail_t.size)
         extra = 4 * n_out + 2 * scn.vms.n_vms
+    if scn.topology is not None:
+        # network stage-ins add a K_STAGE open plus a K_READY arrival per
+        # row, and fair-share recomputes can split previously-coincident
+        # completions into separate events
+        extra += 2 * scn.cloudlets.n_cloudlets
     return 4 * (scn.cloudlets.n_cloudlets + scn.vms.n_vms) + 260 + extra
 
 
@@ -127,6 +136,11 @@ def ready_times(scn: Scenario) -> Array:
     Only meaningful for fixed-binding rows (``vm >= 0``); ``init_state`` sets
     service-routed rows to INF until the broker dispatches them, at which
     point the stage-in clock starts against the assigned VM's bandwidth.
+
+    ``input_dc >= 0`` rows staging from a remote DC bill the flat
+    ``interdc_bw_mbps`` divisor here; under a topology ``init_state``
+    overrides them to INF and the transfer phase prices the move on the link
+    ledger instead (DESIGN.md §13).
     """
     cls, vms = scn.cloudlets, scn.vms
     vmi = jnp.clip(cls.vm, 0, vms.n_vms - 1)
@@ -135,6 +149,13 @@ def ready_times(scn: Scenario) -> Array:
         cls.input_mb / jnp.maximum(vms.bw_mbps[vmi], 1e-6),
         0.0,
     )
+    if scn.topology is None:
+        remote = (cls.input_dc >= 0) & (cls.input_dc != vms.dc[vmi])
+        stage_in = jnp.where(
+            remote,
+            cls.input_mb / jnp.maximum(scn.policy.interdc_bw_mbps, 1e-6),
+            stage_in,
+        )
     return cls.submit_t + stage_in
 
 
@@ -785,6 +806,11 @@ def _phase_prologue(
     #     observe or use the dead hosts: evict residents, roll back work ---
     st = provision.apply_outages(scn, st)
 
+    # --- close arrived/cancelled transfers so their link slots are free
+    #     before this event's migration commits and stage-in opens ---
+    if scn.topology is not None:
+        st = provision.settle_transfers(scn, st)
+
     # --- instrument pre hooks (Sensor tick refreshes sensed_load) ---
     aux = list(aux)
     for i, ins in enumerate(instruments):
@@ -800,6 +826,8 @@ def _cand_kinds(scn: Scenario, instruments: tuple) -> Array:
     candidate times (same per scenario row — shapes and instrument tuples
     are static across a campaign)."""
     cand_k = [K_READY, K_READY, K_VM_REQUEST, K_MIGRATION]
+    if scn.topology is not None:
+        cand_k.append(K_STAGE)
     if scn.outages is not None:
         cand_k += [K_FAILURE, K_REPAIR]
     cand_k += [ins.bound_kind for ins in instruments]
@@ -834,6 +862,15 @@ def _phase_bound(
         _min_where(vms.request_t, unplaced),
         _min_where(st.vm_avail_t, migrating),
     ]
+    if scn.topology is not None:
+        # a bound network stage-in submitted in the future must wake the
+        # loop at its submit time so the transfer phase can open it
+        staging = (
+            cls.exists & (cls.input_dc >= 0) & (st.cl_vm >= 0)
+            & (st.cl_xfer_dst < 0) & (st.cl_ready_t >= INF / 2)
+            & (cls.submit_t > st.t)
+        )
+        cand_t.append(_min_where(cls.submit_t, staging))
     if scn.outages is not None:
         ex = scn.hosts.exists
         cand_t.append(jnp.min(jnp.where(
@@ -953,6 +990,17 @@ def event_step(
             st,
         )
 
+    # --- contention-aware transfer phase: open due stage-ins, re-time
+    #     in-flight transfers on occupancy-changed links (DESIGN.md §13) ---
+    if scn.topology is not None:
+        with jax.named_scope(SCOPE_TRANSFER):
+            st = jax.lax.cond(
+                provision.transfer_needed(scn, st),
+                lambda s: provision.transfer_phase(scn, s),
+                lambda s: s,
+                st,
+            )
+
     rate, vm_mips, active, bound_dt, cand_ts = _phase_bound(
         scn, st, aux, instruments
     )
@@ -1049,6 +1097,18 @@ def batch_event_step(
             lambda s: s,
             st2,
         )
+
+    if scn_b.topology is not None:
+        need_xfer = jnp.any(
+            jax.vmap(provision.transfer_needed)(scn_b, st3) & live
+        )
+        with jax.named_scope(SCOPE_TRANSFER):
+            st3 = jax.lax.cond(
+                need_xfer,
+                lambda s: jax.vmap(provision.transfer_phase)(scn_b, s),
+                lambda s: s,
+                st3,
+            )
 
     def bound(scn, st, aux):
         return _phase_bound(scn, st, aux, instruments_for(scn, extras))

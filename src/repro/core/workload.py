@@ -160,11 +160,13 @@ def lognormal(key: Array, n: int, median, sigma) -> Array:
 
 def assemble_cloudlets(
     vm: Array, length_mi: Array, submit_t: Array,
-    cores=1, input_mb=0.0, output_mb=0.0, deadline=INF,
+    cores=1, input_mb=0.0, output_mb=0.0, deadline=INF, input_dc=-1,
 ) -> Cloudlets:
     """Traced twin of ``scenarios.make_cloudlets``: jnp sort by submit time
     (FCFS is row order downstream), everything vmappable.  ``deadline`` is
-    the absolute SLA finish time (INF: none)."""
+    the absolute SLA finish time (INF: none); ``input_dc >= 0`` declares the
+    datacenter holding the row's input data (stage-in becomes a network
+    transfer, DESIGN.md §13)."""
     n = submit_t.shape[0]
     order = jnp.argsort(submit_t, stable=True)
     bcast = lambda x, dt: jnp.broadcast_to(jnp.asarray(x, dt), (n,))[order]
@@ -174,6 +176,7 @@ def assemble_cloudlets(
         cores=bcast(cores, jnp.int32),
         submit_t=jnp.asarray(submit_t, jnp.float32)[order],
         input_mb=bcast(input_mb, jnp.float32),
+        input_dc=bcast(input_dc, jnp.int32),
         output_mb=bcast(output_mb, jnp.float32),
         deadline=bcast(deadline, jnp.float32),
         exists=jnp.ones((n,), bool),

@@ -65,6 +65,9 @@ def _all_scenarios():
         ("evacuation", scenarios.evacuation_scenario()),
         ("evacuation_ctrl", scenarios.evacuation_scenario(
             evacuation=False, ckpt_interval=3.0e38)),
+        ("staging", scenarios.staging_scenario(n_cloudlets=24)),
+        ("staging_loc", scenarios.staging_scenario(
+            n_cloudlets=24, locality_dispatch=True)),
     ]
 
 
@@ -202,6 +205,68 @@ def test_no_migrations_with_federation_off(name, scn):
     res = jax.jit(simulate)(scn)
     assert int(res.n_migrations) == 0, name
     assert int(res.n_evacuations) == 0, name
+
+
+def _neutral_topology_scenarios():
+    """Scenarios where no two transfers ever share a link: the regime where
+    attaching a *neutral* topology (uniform bandwidth equal to the flat
+    ``interdc_bw_mbps`` divisor, zero latency) must be bitwise invisible.
+    Contended scenarios are excluded by design — fair sharing on a shared
+    link is exactly the behavior the ledger is meant to change
+    (tests/test_network.py pins those numbers)."""
+    key = jax.random.PRNGKey(0)
+    return [
+        ("fig4_ss", scenarios.fig4_scenario(SPACE_SHARED, SPACE_SHARED)),
+        ("fig4_tt", scenarios.fig4_scenario(TIME_SHARED, TIME_SHARED)),
+        ("fig7_8", scenarios.fig7_8_scenario(16)),
+        ("generated", scenarios.generated_scenario(
+            key, kind="poisson", n_cloudlets=16, n_vms=4, n_hosts=4,
+            rate=0.2, median_mi=10_000.0)),
+        ("single_overflow", scenarios.table1_scenario(True, n_vms=8)),
+        ("balance", scenarios.balance_scenario()),
+        # consolidation_scenario is intentionally absent: its sensor tick
+        # commits two live migrations over one link in the same event, so
+        # the fair-share recompute (correctly) diverges from the flat path
+    ]
+
+
+_NEUTRAL_IDS = [name for name, _ in _neutral_topology_scenarios()]
+
+
+@pytest.mark.parametrize(
+    "name,scn", _neutral_topology_scenarios(), ids=_NEUTRAL_IDS)
+def test_neutral_topology_is_bitwise_flat(name, scn):
+    """The topology-vs-flat equivalence lock (DESIGN.md §13): a uniform
+    topology with ``bw_mbps == Policy.interdc_bw_mbps`` and zero latency
+    yields a bit-identical ``SimResult`` to ``topology=None`` — through the
+    plain, traced, and batch-major drivers."""
+    import dataclasses
+
+    from repro.core import simulate_trace, stack_scenarios
+
+    topo = energy_mod.Topology.uniform(
+        scn.hosts.n_dc, latency_s=0.0,
+        bw_mbps=float(scn.policy.interdc_bw_mbps))
+    scn_t = scn.replace(topology=topo)
+    res = jax.jit(simulate)(scn)
+    res_t = jax.jit(simulate)(scn_t)
+    for f in dataclasses.fields(res):
+        np.testing.assert_array_equal(
+            np.array(getattr(res, f.name)), np.array(getattr(res_t, f.name)),
+            err_msg=f"{name}: SimResult.{f.name} diverged (plain)")
+    ts = jnp.asarray(np.arange(0.0, 3000.0, 401.0, dtype=np.float32))
+    res_tr, _ = simulate_trace(scn_t, ts)
+    for f in dataclasses.fields(res):
+        np.testing.assert_array_equal(
+            np.array(getattr(res, f.name)),
+            np.array(getattr(res_tr, f.name)),
+            err_msg=f"{name}: SimResult.{f.name} diverged (trace)")
+    res_b = jax.jit(simulate)(stack_scenarios([scn_t, scn_t]))
+    for f in dataclasses.fields(res):
+        np.testing.assert_array_equal(
+            np.array(getattr(res, f.name)),
+            np.array(getattr(res_b, f.name))[0],
+            err_msg=f"{name}: SimResult.{f.name} diverged (batch-major)")
 
 
 @pytest.mark.parametrize("name,scn", _all_scenarios(), ids=_IDS)

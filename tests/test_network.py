@@ -1,0 +1,276 @@
+"""Contention-aware network transfer subsystem (DESIGN.md §13).
+
+Four families:
+
+* **provisioner regression** — the two bugs this PR fixes: NaN-poisoned
+  peer selection over disconnected (INF-latency) links terminally failing
+  VMs that had feasible peers, and ``energy.migration_delay_matrix``
+  omitting ``Policy.migration_fixed_s`` (disagreeing with the delay the
+  engine actually charges).
+* **fair-share honesty** — k concurrent transfers on one link each finish
+  in k× the lone-transfer byte time (exact under the analytic recompute),
+  including a hand-computed staggered-join/leave case.
+* **flat-path equivalence** — ``topology=None`` scenarios with remote
+  input data bill the flat ``interdc_bw_mbps`` divisor; the uniform-
+  topology bitwise lock lives in test_invariants.py.
+* **driver equivalence** — staging transfers firing leave ``simulate`` /
+  ``simulate_trace`` / ``simulate_history`` bit-identical, with K_STAGE
+  events visible in the history.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import scenarios, simulate, simulate_history, simulate_trace
+from repro.core import energy as energy_mod
+from repro.core.energy import Topology
+from repro.core.step import K_STAGE
+
+pytestmark = pytest.mark.tier1
+
+INF = 3.0e38
+
+
+def _assert_results_identical(res_a, res_b):
+    for f in dataclasses.fields(res_a):
+        a, b = getattr(res_a, f.name), getattr(res_b, f.name)
+        np.testing.assert_array_equal(
+            np.array(a), np.array(b), err_msg=f"SimResult.{f.name} diverged"
+        )
+
+
+def _overflow_scenario(topo, n_overflow=1, image_mb=1024.0, length_mi=500.0,
+                       mips=100.0, core_reserving=True):
+    """DC0 full, ``n_overflow`` extra VMs must federate out; one cloudlet
+    per VM.  DC0 has 1 slot, every peer DC has ``n_overflow`` slots."""
+    n_dc = topo.latency_s.shape[0]
+    n_vms = 1 + n_overflow
+    hosts = scenarios.uniform_hosts(n_dc, n_overflow, cores=1, mips=mips,
+                                    ram_mb=4096.0)
+    ex = np.ones((n_dc, n_overflow), bool)
+    ex[0, 1:] = False                       # DC0: exactly one host
+    hosts = hosts.replace(exists=jnp.asarray(ex))
+    vms = scenarios.uniform_vms(n_vms, dc=0, cores=1, mips=mips,
+                                ram_mb=256.0, image_mb=image_mb)
+    cls = scenarios.make_cloudlets(
+        np.arange(n_vms), np.full(n_vms, length_mi), np.zeros(n_vms),
+        input_mb=0.0, output_mb=0.0)
+    pol = scenarios.make_policy(federation=True,
+                                core_reserving=core_reserving, horizon=1e6)
+    return scenarios.Scenario(
+        hosts=hosts, vms=vms, cloudlets=cls,
+        market=scenarios.uniform_market(n_dc), policy=pol, topology=topo)
+
+
+# --------------------------------------------------------------------------
+# bug 1: disconnected peers must not poison the peer ranking
+# --------------------------------------------------------------------------
+
+def test_disconnected_peer_does_not_poison_selection():
+    """3 DCs, DC0 full: DC1 reachable (finite latency), DC2 disconnected
+    (INF latency).  The overflow VM must land on DC1.  Pre-fix, the peer
+    score normalized by max latency = INF/INF = NaN, argmin landed on the
+    NaN row, and the feasible peer was rejected — the VM failed
+    terminally."""
+    lat = np.full((3, 3), np.inf, np.float32)
+    np.fill_diagonal(lat, 0.0)
+    lat[0, 1] = lat[1, 0] = 0.05
+    topo = Topology(latency_s=jnp.asarray(lat),
+                    bw_mbps=jnp.full((3, 3), 100.0, jnp.float32))
+    scn = _overflow_scenario(topo)
+    r = jax.jit(simulate)(scn)
+    assert not bool(np.array(r.vm_failed)[1]), "feasible peer was rejected"
+    assert int(np.array(r.vm_dc)[1]) == 1, "must pick the reachable peer"
+    assert int(r.n_migrations) == 1
+    assert int(r.n_finished) == 2
+
+
+def test_disconnected_peer_is_last_resort():
+    """With the reachable peer full too, the disconnected DC is still
+    selectable (flat worst-case penalty, not a NaN): the VM places there
+    and pays the INF latency through an unavailable-forever clock rather
+    than failing."""
+    lat = np.full((2, 2), np.inf, np.float32)
+    np.fill_diagonal(lat, 0.0)
+    topo = Topology(latency_s=jnp.asarray(lat),
+                    bw_mbps=jnp.full((2, 2), 100.0, jnp.float32))
+    scn = _overflow_scenario(topo)
+    r = jax.jit(simulate)(scn)
+    assert not bool(np.array(r.vm_failed)[1])
+    assert int(np.array(r.vm_dc)[1]) == 1
+    # the image never arrives over a disconnected link
+    assert bool(np.array(r.finish_t)[1] >= INF / 2)
+
+
+# --------------------------------------------------------------------------
+# bug 2: migration_delay_matrix agrees with the engine
+# --------------------------------------------------------------------------
+
+def test_migration_delay_matrix_includes_fixed_term():
+    topo = Topology.uniform(3, latency_s=2.0, bw_mbps=50.0)
+    scn = _overflow_scenario(topo)
+    image = 1024.0
+    m = np.array(energy_mod.migration_delay_matrix(scn, image))
+    fixed = float(scn.policy.migration_fixed_s)
+    want = fixed + np.array(topo.latency_s) + image / np.array(topo.bw_mbps)
+    np.testing.assert_allclose(m, want, rtol=1e-6)
+    assert m.min() >= fixed, "fixed VM-creation latency must be included"
+    # explicit policy overrides the scenario's
+    pol2 = scn.policy.replace(migration_fixed_s=jnp.asarray(7.5, jnp.float32))
+    m2 = np.array(energy_mod.migration_delay_matrix(scn, image, policy=pol2))
+    np.testing.assert_allclose(m2, want - fixed + 7.5, rtol=1e-6)
+
+
+def test_migration_delay_matrix_agrees_with_engine():
+    """An uncontended federation migration becomes usable exactly when the
+    matrix says: finish = matrix[origin, dst] + length/mips."""
+    topo = Topology.uniform(2, latency_s=3.0, bw_mbps=40.0)
+    scn = _overflow_scenario(topo, length_mi=500.0, mips=100.0)
+    r = jax.jit(simulate)(scn)
+    assert int(r.n_migrations) == 1
+    delay = float(energy_mod.migration_delay_matrix(
+        scn, float(scn.vms.image_mb[1]))[0, 1])
+    want = delay + 500.0 / 100.0
+    np.testing.assert_allclose(float(np.array(r.finish_t)[1]), want,
+                               rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# fair-share honesty
+# --------------------------------------------------------------------------
+
+def _staging_scenario(k, input_mb=1000.0, bw=100.0, lat=0.0,
+                      submit=None, length_mi=100.0, mips=100.0):
+    """k fixed-binding cloudlets staging ``input_mb`` from DC1 to their own
+    VM in DC0 — every transfer shares the single (1, 0) link."""
+    hosts = scenarios.uniform_hosts(2, k, cores=1, mips=mips, ram_mb=4096.0)
+    vms = scenarios.uniform_vms(k, dc=0, cores=1, mips=mips, ram_mb=256.0)
+    sub = np.zeros(k) if submit is None else np.asarray(submit, np.float64)
+    cls = scenarios.make_cloudlets(
+        np.arange(k), np.full(k, length_mi), sub,
+        input_mb=input_mb, output_mb=0.0, input_dc=1)
+    pol = scenarios.make_policy(horizon=1e6, interdc_bw_mbps=bw)
+    return scenarios.Scenario(
+        hosts=hosts, vms=vms, cloudlets=cls,
+        market=scenarios.uniform_market(2), policy=pol,
+        topology=Topology.uniform(2, latency_s=lat, bw_mbps=bw))
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_k_concurrent_stagings_share_the_link(k):
+    """k simultaneous stage-ins on one link each take exactly k× the lone
+    transfer's byte time (they open in one transfer phase at share bw/k)."""
+    bw, mb, lat = 100.0, 1000.0, 0.5
+    r = jax.jit(simulate)(_staging_scenario(k, input_mb=mb, bw=bw, lat=lat))
+    start = np.array(r.start_t)
+    want = lat + k * mb / bw
+    np.testing.assert_allclose(start, np.full(k, want), rtol=1e-6)
+    # all k are priced in the same recompute: bitwise-equal start times
+    assert (start == start[0]).all()
+    assert int(r.n_finished) == k
+
+
+def test_concurrent_migrations_fair_share():
+    """k federation migrations committed in one provisioning scan settle to
+    the same fair-share completion: fixed + latency + k·image/bw each (the
+    same-event recompute re-times the earlier commits to the final k-way
+    share)."""
+    k, bw, image, lat, mips, length = 3, 50.0, 1024.0, 1.0, 100.0, 500.0
+    topo = Topology.uniform(2, latency_s=lat, bw_mbps=bw)
+    scn = _overflow_scenario(topo, n_overflow=k, image_mb=image,
+                             length_mi=length, mips=mips)
+    r = jax.jit(simulate)(scn)
+    assert int(r.n_migrations) == k
+    fin = np.array(r.finish_t)[1:]           # the k migrated VMs' cloudlets
+    fixed = float(scn.policy.migration_fixed_s)
+    want = fixed + lat + k * image / bw + length / mips
+    np.testing.assert_allclose(fin, np.full(k, want), rtol=1e-5)
+
+
+def test_staggered_join_hand_computed():
+    """Fair-share dynamics, worked by hand (lat=0, bw=100, 1000 MB each,
+    T = 10 s alone): A opens at t=0; B joins at s=2 → both at bw/2; A
+    finishes at 2T−s = 18; B (800 MB done by then) gets the link back and
+    finishes at 2T = 20."""
+    r = jax.jit(simulate)(_staging_scenario(
+        2, input_mb=1000.0, bw=100.0, lat=0.0, submit=[0.0, 2.0]))
+    start = np.array(r.start_t)
+    np.testing.assert_allclose(start[0], 18.0, rtol=1e-6)
+    np.testing.assert_allclose(start[1], 20.0, rtol=1e-6)
+    assert int(r.n_finished) == 2
+
+
+def test_flat_path_bills_interdc_divisor():
+    """``topology=None`` with remote input data: stage-in billed at the
+    flat ``interdc_bw_mbps`` divisor, concurrency-blind — k transfers all
+    start at input/bw."""
+    k, bw, mb = 3, 50.0, 1000.0
+    scn = _staging_scenario(k, input_mb=mb, bw=bw)   # VM-local bw is 100
+    scn = dataclasses.replace(scn, topology=None)
+    r = jax.jit(simulate)(scn)
+    np.testing.assert_allclose(
+        np.array(r.start_t), np.full(k, mb / bw), rtol=1e-6)
+    # local rows (input on the VM's own DC) keep the VM-local divisor
+    cls2 = scn.cloudlets.replace(
+        input_dc=jnp.zeros_like(scn.cloudlets.input_dc))
+    r2 = jax.jit(simulate)(dataclasses.replace(scn, cloudlets=cls2))
+    np.testing.assert_allclose(
+        np.array(r2.start_t),
+        np.full(k, mb / float(scn.vms.bw_mbps[0])), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# driver equivalence with staging traffic
+# --------------------------------------------------------------------------
+
+def test_drivers_bitwise_with_staging_firing():
+    scn = scenarios.staging_scenario(n_cloudlets=24)
+    res = jax.jit(simulate)(scn)
+    assert int(res.n_finished) == 24
+    ts = jnp.asarray(np.arange(0.0, 300.0, 17.0, dtype=np.float32))
+    res_t, prog = simulate_trace(scn, ts)
+    _assert_results_identical(res, res_t)
+    assert (np.diff(np.array(prog), axis=0) >= -1e-5).all()
+    res_h, hist = jax.jit(simulate_history)(scn)
+    _assert_results_identical(res, res_h)
+
+
+def test_stage_event_wakes_loop_for_prebound_rows():
+    """A fixed-binding row submitted in the future has no dispatch event to
+    open its transfer; the K_STAGE bound must wake the loop at its submit
+    time (the staggered-join case above depends on it)."""
+    scn = _staging_scenario(2, input_mb=1000.0, bw=100.0, lat=0.0,
+                            submit=[0.0, 2.0])
+    res, hist = jax.jit(simulate_history)(scn)
+    kinds = np.array(hist.kind)[np.array(hist.valid)]
+    t = np.array(hist.t)[np.array(hist.valid)]
+    assert (kinds == K_STAGE).sum() == 1
+    np.testing.assert_allclose(t[kinds == K_STAGE], [2.0])
+
+
+def test_locality_dispatch_prefers_data_gravity():
+    """Under locality dispatch an idle VM co-located with the input beats
+    an idle remote VM: the single cloudlet stages over the diagonal
+    (intra-DC) link."""
+    hosts = scenarios.uniform_hosts(2, 1, cores=1, mips=100.0, ram_mb=4096.0)
+    vms = scenarios.uniform_vms(2, dc=np.array([0, 1]), cores=1, mips=100.0,
+                                ram_mb=256.0)
+    cls = scenarios.make_cloudlets(
+        np.array([-1]), np.array([100.0]), np.array([0.0]),
+        input_mb=1000.0, output_mb=0.0, input_dc=1)
+    topo_lat = Topology.uniform(2, latency_s=0.0, bw_mbps=100.0)
+    # slow inter-DC links, fast intra-DC: data gravity should pick VM1
+    bw = np.full((2, 2), 10.0, np.float32)
+    np.fill_diagonal(bw, 1000.0)
+    topo = Topology(latency_s=topo_lat.latency_s, bw_mbps=jnp.asarray(bw))
+    for loc, want_vm in ((False, 0), (True, 1)):
+        pol = scenarios.make_policy(horizon=1e6, locality_dispatch=loc)
+        scn = scenarios.Scenario(
+            hosts=hosts, vms=vms, cloudlets=cls,
+            market=scenarios.uniform_market(2), policy=pol, topology=topo)
+        r = jax.jit(simulate)(scn)
+        assert int(np.array(r.cl_vm)[0]) == want_vm, f"locality={loc}"
+        assert int(r.n_finished) == 1
