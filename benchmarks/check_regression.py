@@ -4,7 +4,8 @@
         --baseline BENCH_baseline.json \
         --fresh BENCH_engine.json BENCH_event_engine.json \
                 BENCH_migration.json BENCH_reliability.json \
-                BENCH_campaign.json BENCH_network.json
+                BENCH_campaign.json BENCH_network.json \
+                BENCH_serving.json
 
 Merges the fresh reports (top-level sections are disjoint by construction:
 ``benchmarks/engine_sweep.py``, ``benchmarks/event_engine.py``,
@@ -38,6 +39,12 @@ updates together — see the baseline's ``_note`` key):
 * ``network_transfer_batch.batch_major.transfers_per_s`` — the same subject
                                                  as a B=32 locality-knob
                                                  campaign (batch-major)
+* ``serving_single.jnp.serving_requests_per_s`` — KV-cache-bound continuous
+                                                 batching through the event
+                                                 loop (DESIGN.md §14)
+* ``serving_batch.batch_major.serving_requests_per_s`` — the B=32 rate x
+                                                 kv_blocks x threshold SLO
+                                                 campaign (batch-major)
 
 Only the jnp path gates: the Pallas twin runs in interpret mode on CPU CI,
 so its wall time is a correctness seat, not a perf claim (DESIGN.md §4).
@@ -65,6 +72,8 @@ GATED = (
     ("campaign_sharded", "sharded", "scenarios_per_s"),
     ("network_transfer_single", "jnp", "transfers_per_s"),
     ("network_transfer_batch", "batch_major", "transfers_per_s"),
+    ("serving_single", "jnp", "serving_requests_per_s"),
+    ("serving_batch", "batch_major", "serving_requests_per_s"),
 )
 
 
@@ -112,7 +121,8 @@ def main(argv=None) -> int:
                              "BENCH_migration.json",
                              "BENCH_reliability.json",
                              "BENCH_campaign.json",
-                             "BENCH_network.json"],
+                             "BENCH_network.json",
+                             "BENCH_serving.json"],
                     help="fresh report(s); top-level sections are merged")
     ap.add_argument("--tol", type=float, default=0.5,
                     help="fail when fresh/baseline falls below this ratio")

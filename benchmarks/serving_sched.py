@@ -1,28 +1,148 @@
-"""Beyond-paper: the CloudSim policies driving the REAL serving engine —
-simulated prediction vs measured outcome (the paper's 'evaluate before
-deploy' loop closed on hardware)."""
+"""KV-cache-bound continuous batching through the event engine (§14).
+
+Beyond-paper rows for the serving tentpole: an inference-fleet scenario
+(diurnal request arrivals, block-granular KV admission, preemption,
+continuous-batch decode) timed through the single event loop and as a
+B=32 batch-major SLO campaign sweeping rate x kv_blocks x autoscale
+threshold inside one compiled program, with TTFT/TPOT pooled by
+``LatencyHistogramReducer``.  The gated numbers are
+``serving_single.jnp.serving_requests_per_s`` and
+``serving_batch.batch_major.serving_requests_per_s``
+(``benchmarks/check_regression.py`` vs ``BENCH_baseline.json``).
+
+A third, non-gated section keeps the PR-9 loop alive: the same CloudSim
+policies driving the REAL ``repro.serving`` engine — simulated prediction
+vs measured outcome (the paper's "evaluate before deploy" loop closed on
+hardware).
+
+    PYTHONPATH=src python -m benchmarks.serving_sched
+
+Writes ``BENCH_serving.json``.
+"""
 from __future__ import annotations
+
+import json
+import time
 
 import jax
 import numpy as np
 
-from repro.configs import get_config
-from repro.core import SPACE_SHARED, TIME_SHARED
-from repro.models import build_model
-from repro.serving import ServingEngine, choose_policy
-from repro.serving.scheduler import Request
+from repro.core import (
+    reducers,
+    run_campaign,
+    scenarios,
+    simulate,
+    stack_scenarios,
+)
+
+OUT_PATH = "BENCH_serving.json"
 
 
-def run(n_requests=6, slots=2, new_tokens=8):
+def _fleet(*, rate=2.0, kv_blocks=32.0, scale_up_thresh=0.75,
+           n_requests=96, max_steps=None):
+    return scenarios.serving_scenario(
+        jax.random.PRNGKey(0), n_requests=n_requests, n_replicas=4,
+        n_pool=2, kv_blocks=kv_blocks, rate=rate, autoscale=True,
+        scale_up_thresh=scale_up_thresh, batch_degradation=0.1,
+        median_prompt=96.0, median_new=64.0, deadline_rel=30.0,
+        max_steps=max_steps)
+
+
+def bench_single(n_requests: int = 96, n_rep: int = 5) -> dict:
+    """One pressured inference fleet through the event loop: admission,
+    block-boundary stops, eviction and continuous-batch decode all price
+    the serving phase itself."""
+    fn = jax.jit(simulate)
+    scn = _fleet(n_requests=n_requests)
+    res = fn(scn)                                     # compile + warm
+    jax.block_until_ready(res)
+    t0 = time.perf_counter()
+    for _ in range(n_rep):
+        res = fn(scn)
+        jax.block_until_ready(res)
+    wall = (time.perf_counter() - t0) / n_rep
+    served = int(res.n_finished)
+    assert served > 0
+    return {
+        "jnp": {
+            "n_requests": n_requests,
+            "n_served": served,
+            "n_events": int(res.n_events),
+            "wall_s": wall,
+            "serving_requests_per_s": served / wall,
+            "events_per_s": int(res.n_events) / wall,
+            "ttft_p99_s": float(res.ttft_p99),
+            "tpot_p99_s": float(res.tpot_p99),
+        }
+    }
+
+
+def bench_batch(n_requests: int = 48, n_rep: int = 3) -> dict:
+    """The SLO campaign surface: a rate x kv_blocks x autoscale-threshold
+    grid (B=32) through the batch-major step loop, TTFT/TPOT tails pooled
+    across the whole grid by streaming reducers."""
+    grid = [
+        dict(rate=r, kv_blocks=kv, scale_up_thresh=th)
+        for r in (1.0, 1.5, 2.0, 3.0)
+        for kv in (16.0, 24.0, 48.0, 64.0)
+        for th in (0.6, 0.9)
+    ]
+    rows = [_fleet(n_requests=n_requests, max_steps=2000, **g)
+            for g in grid]
+    batched = stack_scenarios(rows)
+    reduce = {
+        "served": reducers.SumReducer("n_finished"),
+        "ttft": reducers.LatencyHistogramReducer(
+            "ttft", lo=0.0, hi=60.0, bins=256, qs=(0.5, 0.99)),
+        "tpot": reducers.LatencyHistogramReducer(
+            "tpot", lo=0.0, hi=1.0, bins=256, qs=(0.5, 0.99)),
+        "violations": reducers.SumReducer("sla_violations"),
+    }
+
+    out = run_campaign(batched, chunk_size=8, reduce=reduce)
+    jax.tree.map(jax.block_until_ready, out)          # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(n_rep):
+        out = run_campaign(batched, chunk_size=8, reduce=reduce)
+        jax.tree.map(jax.block_until_ready, out)
+    wall = (time.perf_counter() - t0) / n_rep
+    served = int(np.asarray(out["served"]))
+    assert served > 0
+    return {
+        "batch_major": {
+            "batch": len(rows),
+            "n_requests": len(rows) * n_requests,
+            "n_served": served,
+            "wall_s": wall,
+            "serving_requests_per_s": served / wall,
+        },
+        "slo": {
+            "ttft_p50_s": float(out["ttft"]["q0.5"]),
+            "ttft_p99_s": float(out["ttft"]["q0.99"]),
+            "tpot_p50_s": float(out["tpot"]["q0.5"]),
+            "tpot_p99_s": float(out["tpot"]["q0.99"]),
+            "n_sla_violations": int(np.asarray(out["violations"])),
+        },
+    }
+
+
+def bench_crosscheck(n_requests=6, slots=2, new_tokens=8) -> dict:
+    """CloudSim policies driving the REAL serving engine — simulated
+    prediction vs measured outcome (not perf-gated; it exercises a tiny
+    actual model)."""
+    from repro.configs import get_config
+    from repro.core import SPACE_SHARED, TIME_SHARED
+    from repro.models import build_model
+    from repro.serving import ServingEngine, choose_policy
+    from repro.serving.scheduler import Request
+
     cfg = get_config("internlm2-1.8b", smoke=True)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    rows = []
-    # prediction from the simulator
     reqs = [Request(rid=i, arrival=0.0, prompt_len=8,
                     max_new_tokens=new_tokens) for i in range(n_requests)]
     pol, pred = choose_policy(reqs, slots, tokens_per_sec=100.0)
-    # measured on the engine
+    rows = []
     for name, policy in (("space", SPACE_SHARED), ("time", TIME_SHARED)):
         eng = ServingEngine(model, params, n_slots=slots, max_len=64,
                             policy=policy, quantum=4)
@@ -39,17 +159,37 @@ def run(n_requests=6, slots=2, new_tokens=8):
             "predicted_mean_tat": pred[name]["mean_tat"] * 100.0
             if pred else float("nan"),  # sim seconds @100 tok/s -> steps
         })
-    return pol, rows
+    return {"recommends": "space" if pol == 0 else "time", "rows": rows}
 
 
-def main():
-    pol, rows = run()
-    print("policy,measured_mean_tat_steps,measured_makespan_steps,"
-          "sim_predicted_mean_tat_steps")
-    for r in rows:
-        print(f"{r['policy']},{r['measured_mean_tat']:.1f},"
-              f"{r['measured_makespan']},{r['predicted_mean_tat']:.1f}")
-    print(f"simulator_recommends,{'space' if pol == 0 else 'time'}")
+def run() -> dict:
+    return {
+        "backend": jax.default_backend(),
+        "serving_single": bench_single(),
+        "serving_batch": bench_batch(),
+        "serving_crosscheck": bench_crosscheck(),
+    }
+
+
+def main() -> None:
+    report = run()
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {OUT_PATH}")
+    s = report["serving_single"]["jnp"]
+    print(f"serving,single,requests_per_s={s['serving_requests_per_s']:.1f},"
+          f"ttft_p99={s['ttft_p99_s']:.3f},tpot_p99={s['tpot_p99_s']:.4f}")
+    b = report["serving_batch"]
+    print(f"serving,batch,B={b['batch_major']['batch']},"
+          f"requests_per_s={b['batch_major']['serving_requests_per_s']:.1f},"
+          f"ttft_p99={b['slo']['ttft_p99_s']:.3f},"
+          f"violations={b['slo']['n_sla_violations']}")
+    c = report["serving_crosscheck"]
+    for r in c["rows"]:
+        print(f"serving,crosscheck,{r['policy']},"
+              f"measured_tat={r['measured_mean_tat']:.1f},"
+              f"predicted_tat={r['predicted_mean_tat']:.1f}")
+    print(f"serving,crosscheck,recommends={c['recommends']}")
 
 
 if __name__ == "__main__":

@@ -3,8 +3,8 @@
 
     PYTHONPATH=src python scripts/check_docs.py
 
-API.md documents ``Policy``, ``Cloudlets`` and ``SimResult`` as markdown
-tables whose first column is the backtick-quoted field name.  Adding a dataclass field without
+API.md documents ``Hosts``, ``Policy``, ``Cloudlets`` and ``SimResult`` as
+markdown tables whose first column is the backtick-quoted field name.  Adding a dataclass field without
 documenting it — or documenting a field that no longer exists — is exactly
 the silent drift that makes hand-written API docs rot, so CI fails on any
 asymmetric difference.  Field sets are compared, not order or prose.
@@ -26,6 +26,7 @@ API_MD = os.path.join(ROOT, "docs", "API.md")
 
 # (heading regex locating the table, dataclass path)
 TABLES = (
+    (r"##.*\bHosts fields\b", "repro.core.entities:Hosts"),
     (r"##.*\bPolicy fields\b", "repro.core.entities:Policy"),
     (r"##.*\bCloudlets fields\b", "repro.core.entities:Cloudlets"),
     (r"##.*\bSimResult fields\b", "repro.core.entities:SimResult"),

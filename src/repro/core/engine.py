@@ -90,8 +90,11 @@ def init_state(scn: Scenario) -> SimState:
         free_storage=jnp.where(hosts.exists, hosts.storage_mb, 0.0),
         free_bw=jnp.where(hosts.exists, hosts.bw_mbps, 0.0),
         free_cores=jnp.where(hosts.exists, hosts.cores.astype(f32), 0.0),
+        free_kv=jnp.where(hosts.exists, hosts.kv_blocks, 0.0),
         cl_vm=cls.vm.astype(i32),
         cl_ready_t=ready0,
+        cl_admitted=jnp.zeros((C,), bool),
+        cl_kv=jnp.zeros((C,), f32),
         rem_mi=jnp.where(cls.exists, cls.length_mi, 0.0),
         cl_rollback_mi=jnp.zeros((C,), f32),
         started=jnp.zeros((C,), bool),

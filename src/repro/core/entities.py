@@ -45,6 +45,9 @@ class Hosts:
     ram_mb: Array       # [D,H] f32
     storage_mb: Array   # [D,H] f32
     bw_mbps: Array      # [D,H] f32
+    kv_blocks: Array    # [D,H] f32  KV-cache blocks the host's accelerators
+                        #            hold — the binding memory resource of LLM
+                        #            serving (0: not a serving host, §14)
     exists: Array       # [D,H] bool (ragged datacenters are masked, not padded out)
 
     @property
@@ -66,6 +69,8 @@ class VMRequests:
     ram_mb: Array      # [V] f32
     storage_mb: Array  # [V] f32
     bw_mbps: Array     # [V] f32
+    kv_blocks: Array   # [V] f32  KV-cache blocks the VM (a serving replica)
+                       #          reserves on its host — its decode-batch pool
     request_t: Array   # [V] f32  when the broker asks for the VM
     image_mb: Array    # [V] f32  VM image size — migration transfer volume
     exists: Array      # [V] bool
@@ -102,6 +107,12 @@ class Cloudlets:
     (DESIGN.md §13); without a topology it bills the flat
     ``Policy.interdc_bw_mbps`` divisor when remote.  ``input_dc == -1`` keeps
     the legacy VM-local stage-in (``input_mb / vm_bw``).
+
+    ``prompt_tokens > 0`` marks a *serving* row: an LLM inference request
+    generating ``max_new_tokens`` tokens (``length_mi / max_new_tokens`` MI
+    each), which must hold ``ceil((prompt + generated) / block_tokens)`` KV
+    blocks of its VM's pool while in the decode batch (DESIGN.md §14).
+    ``prompt_tokens == 0`` rows keep classic batch-cloudlet semantics.
     """
 
     vm: Array         # [C] i32  target VM (-1: broker-dispatched at submit)
@@ -112,6 +123,9 @@ class Cloudlets:
     input_dc: Array   # [C] i32  datacenter holding the input data (-1: VM-local)
     output_mb: Array  # [C] f32  staged out at completion
     deadline: Array   # [C] f32  absolute SLA finish time (INF: none)
+    prompt_tokens: Array   # [C] f32  prompt length; > 0 marks a serving row
+    max_new_tokens: Array  # [C] f32  decode budget of a serving row (its
+                           #          length_mi spreads evenly across tokens)
     exists: Array     # [C] bool
 
     @property
@@ -200,6 +214,13 @@ class Policy:
                               #   choosing a VM for service-routed cloudlets
                               #   (needs Scenario.topology; False keeps the
                               #   least-loaded rank dispatch bitwise)
+    # --- LLM serving (KV-bound continuous batching), DESIGN.md §14 ---
+    block_tokens: Array       # scalar f32: tokens per KV-cache block — a
+                              #   serving row holds ceil(ctx / block_tokens)
+                              #   blocks of its VM's pool
+    batch_degradation: Array  # scalar f32: per-step decode rate of a batched
+                              #   request scales by 1 / (1 + alpha * (b - 1))
+                              #   for a decode batch of b (0: free batching)
 
 
 @pytree_dataclass(static=("max_steps", "sweep_impl"))
@@ -263,10 +284,16 @@ class SimState:
     free_storage: Array  # [D,H] f32
     free_bw: Array       # [D,H] f32
     free_cores: Array    # [D,H] f32 (only enforced when core_reserving)
+    free_kv: Array       # [D,H] f32 KV-cache blocks not reserved by placed
+                         #           serving VMs (DESIGN.md §14)
     # --- cloudlet execution ---
     cl_vm: Array         # [C] i32 current VM assignment; rows submitted with
                          #         vm == -1 are broker-dispatched at submit time
     cl_ready_t: Array    # [C] f32 stage-in completes (INF until dispatched)
+    cl_admitted: Array   # [C] bool serving row currently in its VM's decode
+                         #          batch (admission gated on free KV blocks)
+    cl_kv: Array         # [C] f32 KV blocks the row holds in its VM's pool
+                         #         (0 while waiting / preempted / finished)
     rem_mi: Array        # [C] f32 remaining million-instructions (per core)
     cl_rollback_mi: Array  # [C] f32 work re-done after failures: total MI added
                            #         back to rem_mi by checkpoint rollbacks
@@ -336,6 +363,12 @@ class SimResult:
     downtime: Array        # scalar f32: total VM-seconds lost to failures
                            #             (evicted + recovery transfer windows)
     n_evacuations: Array   # scalar i32: proactive pre-failure drains
+    # --- serving tail latency (DESIGN.md §14; INF when no serving rows) ---
+    ttft_p50: Array        # scalar f32: median time-to-first-token over
+                           #             finished serving rows
+    ttft_p99: Array        # scalar f32: p99 time-to-first-token
+    tpot_p50: Array        # scalar f32: median time-per-output-token
+    tpot_p99: Array        # scalar f32: p99 time-per-output-token
 
 
 def finished_mask(res: SimResult) -> Array:

@@ -1,0 +1,169 @@
+"""KV-cache-bound continuous batching: the LLM-serving phase (DESIGN.md §14).
+
+A serving cloudlet (``Cloudlets.prompt_tokens > 0``) is a token-generation
+request: its ``length_mi`` is ``max_new_tokens`` decode steps of
+``length_mi / max_new_tokens`` MI each, and while it decodes it holds
+KV-cache blocks of its VM's pool (``VMRequests.kv_blocks``, reserved on the
+host via the ordinary provisioning ledger — ``Hosts.kv_blocks`` is the
+capacity dimension).  The phase below is the vLLM-style block scheduler
+re-derived as dataflow, run once per event behind a scalar ``lax.cond``
+(``step.SCOPE_SERVING``):
+
+1. **release** — finished rows give their blocks back to the VM pool.
+2. **growth commit** — an admitted row's footprint is recomputed from its
+   context length: every filled block plus the open block its next token
+   writes into (paged-attention semantics).
+3. **eviction** — if a VM's committed footprints exceed its pool, the
+   *youngest* residents (highest row index — rows are submit-ordered) are
+   preempted until the rest fit.  A preempted request loses its cache and
+   rolls back to its last completed token (the delta lands in
+   ``cl_rollback_mi``, the PR-5 re-done-work meter); it re-enters admission
+   as an ordinary waiting row.
+4. **admission** — ready, waiting serving rows are admitted FCFS (row
+   order) while their prefill footprint fits the pool's free blocks.
+
+Only admitted rows make progress: ``policies.cloudlet_rates`` grants them
+the continuous-batch decode rate ``percore / (1 + alpha * (b - 1))`` and
+gives waiting rows zero.  ``serving_bound`` contributes the next
+block-boundary crossing as a clock stop (``step.K_SERVING``), so growth —
+and therefore eviction — lands on exact block edges.
+
+Every write is gated on the serving mask, so scenarios without serving rows
+are bitwise untouched (the phase is skipped entirely by its cond).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import Array
+
+from repro.core import policies, segments
+from repro.core.entities import INF, Scenario, SimState
+
+# Token-count comparisons tolerate 0.1 token of float32 drift: the work
+# counters drift ~step._eps_mi per event, which at per-token MI of O(10)
+# is a few hundredths of a token.
+TOKEN_EPS = 0.1
+
+
+def is_serving(scn: Scenario) -> Array:
+    """[C] bool — existing token-generation (serving) rows."""
+    cls = scn.cloudlets
+    return cls.exists & (cls.prompt_tokens > 0.0)
+
+
+def token_mi(scn: Scenario) -> Array:
+    """[C] MI per decode step (per generated token)."""
+    cls = scn.cloudlets
+    return cls.length_mi / jnp.maximum(cls.max_new_tokens, 1.0)
+
+
+def generated_tokens(scn: Scenario, state: SimState) -> Array:
+    """[C] tokens emitted so far (fractional between boundary events)."""
+    cls = scn.cloudlets
+    g = (cls.length_mi - state.rem_mi) / jnp.maximum(token_mi(scn), 1e-9)
+    return jnp.clip(g, 0.0, cls.max_new_tokens)
+
+
+def context_tokens(scn: Scenario, state: SimState) -> Array:
+    """[C] current context length: prompt plus generated tokens."""
+    return scn.cloudlets.prompt_tokens + generated_tokens(scn, state)
+
+
+def blocks_needed(scn: Scenario, state: SimState) -> Array:
+    """[C] KV blocks a serving row needs right now: every block its context
+    has filled plus the open block its next token writes into."""
+    bt = jnp.maximum(scn.policy.block_tokens, 1.0)
+    ctx = context_tokens(scn, state)
+    return jnp.where(
+        is_serving(scn), jnp.floor((ctx + TOKEN_EPS) / bt) + 1.0, 0.0
+    )
+
+
+def serving_needed(scn: Scenario, state: SimState) -> Array:
+    """Scalar bool — the scenario carries serving rows at all.  The phase's
+    skip predicate: non-serving scenarios never pay for the ledger sweep
+    (and stay bitwise identical to the pre-serving engine)."""
+    return jnp.any(is_serving(scn))
+
+
+def serving_phase(scn: Scenario, state: SimState) -> SimState:
+    """One KV-block ledger sweep: release, growth commit, eviction,
+    admission (module docstring).  Pure; exact identity when the scenario
+    has no serving rows."""
+    cls, vms = scn.cloudlets, scn.vms
+    V = vms.n_vms
+    srv = is_serving(scn)
+    vmi = jnp.clip(state.cl_vm, 0, V - 1)
+    fin = policies.cloudlet_finished(state)
+    need = blocks_needed(scn, state)
+
+    # 1 + 2: finished rows release; admitted rows commit context growth.
+    admitted = state.cl_admitted & ~fin
+    cl_kv = jnp.where(admitted, need, 0.0)
+
+    # 3: per-VM overflow -> evict youngest-first until the rest fit.  A row
+    # is evicted iff the rows *after* it (strictly younger) do not cover the
+    # overflow on their own — the minimal youngest suffix.
+    seg = jnp.where(admitted, vmi, V)
+    blocks = jnp.where(admitted, cl_kv, 0.0)
+    usage = segments.segment_sum(blocks, seg, V)                     # [V]
+    over = jnp.maximum(usage - vms.kv_blocks, 0.0)                   # [V]
+    prefix = segments.segment_prefix_sum(blocks, seg, V)             # excl
+    younger = usage[vmi] - (prefix + blocks)     # blocks of strictly-later rows
+    evict = admitted & (younger < over[vmi] - 1e-6)
+
+    # A preempted request loses its KV cache: work past the last completed
+    # token is re-done (PR-5 rollback meter), and the row re-enters
+    # admission as an ordinary waiting candidate (at the *next* event — no
+    # same-event evict/re-admit churn).
+    tok = token_mi(scn)
+    g_keep = jnp.floor(generated_tokens(scn, state) + TOKEN_EPS)
+    executed = cls.length_mi - state.rem_mi
+    kept = jnp.minimum(g_keep * tok, executed)
+    new_rem = jnp.where(evict, cls.length_mi - kept, state.rem_mi)
+
+    admitted = admitted & ~evict
+    cl_kv = jnp.where(evict, 0.0, cl_kv)
+    usage = usage - segments.segment_sum(
+        jnp.where(evict, blocks, 0.0), seg, V
+    )
+
+    # 4: FCFS admission (row order == submit order) among ready waiting
+    # rows whose VM is placed and booted; each admits iff the pool still
+    # fits it after everyone ahead of it in the queue.
+    ready = policies.cloudlet_ready(scn, state)
+    cand = (
+        srv & ~fin & ~admitted & ~evict & ready
+        & (state.cl_vm >= 0) & state.vm_placed[vmi]
+        & (state.t >= state.vm_avail_t[vmi])
+    )
+    seg_c = jnp.where(cand, vmi, V)
+    need_c = jnp.where(cand, need, 0.0)
+    prefix_c = segments.segment_prefix_sum(need_c, seg_c, V)
+    admit = cand & (
+        usage[vmi] + prefix_c + need <= vms.kv_blocks[vmi] + 1e-6
+    )
+    admitted = admitted | admit
+    cl_kv = jnp.where(admit, need, cl_kv)
+
+    return state.replace(
+        cl_admitted=admitted,
+        cl_kv=cl_kv,
+        rem_mi=new_rem,
+        cl_rollback_mi=state.cl_rollback_mi + (new_rem - state.rem_mi),
+    )
+
+
+def serving_bound(scn: Scenario, state: SimState, rate: Array) -> Array:
+    """Scalar next-event bound: the earliest block-boundary crossing among
+    decoding rows.  Strictly future (``blocks_needed`` already counts a
+    boundary within TOKEN_EPS as crossed, so the next edge is at least a
+    full block — minus drift — away); INF when nothing decodes."""
+    fin = policies.cloudlet_finished(state)
+    occ = is_serving(scn) & state.cl_admitted & ~fin & (rate > 0)
+    bt = jnp.maximum(scn.policy.block_tokens, 1.0)
+    ctx = context_tokens(scn, state)
+    nxt = (jnp.floor((ctx + TOKEN_EPS) / bt) + 1.0) * bt
+    to_go = jnp.maximum(nxt - ctx, 0.0)
+    t_cross = state.t + to_go * token_mi(scn) / jnp.maximum(rate, 1e-9)
+    return jnp.min(jnp.where(occ, t_cross, INF), initial=INF)

@@ -178,24 +178,45 @@ def cloudlet_rates(scn: Scenario, state: SimState) -> tuple[Array, Array]:
     ready = cloudlet_ready(scn, state)
     fin = cloudlet_finished(state)
     occ = ready & ~fin & scn.cloudlets.exists
-    seg = jnp.where(occ, vmi, V)
+    # Serving rows (prompt_tokens > 0) are scheduled by the continuous-batch
+    # model below, never by the Figure-4 pair; excluding them here keeps them
+    # out of the legacy core-occupancy reductions.  Non-serving scenarios
+    # have the mask all-False, so occ_leg == occ bitwise.
+    is_serving = cls.prompt_tokens > 0.0
+    occ_leg = occ & ~is_serving
+    seg = jnp.where(occ_leg, vmi, V)
     cl_cores_f = cls.cores.astype(jnp.float32)
     vm_cores_f = jnp.maximum(vms.cores.astype(jnp.float32), 1.0)
 
     percore_capacity = vm_mips / vm_cores_f              # [V] MIPS per granted core
 
     # --- space-shared inside the VM (Fig 4a/b upper): FCFS core occupancy ---
-    prefix = segments.segment_prefix_sum(jnp.where(occ, cl_cores_f, 0.0), seg, V)
+    prefix = segments.segment_prefix_sum(
+        jnp.where(occ_leg, cl_cores_f, 0.0), seg, V)
     fits = prefix + cl_cores_f <= vms.cores[vmi].astype(jnp.float32) + 1e-6
-    space = jnp.where(occ & fits, percore_capacity[vmi], 0.0)
+    space = jnp.where(occ_leg & fits, percore_capacity[vmi], 0.0)
 
     # --- time-shared inside the VM (Fig 4b/d): equal per-core share ---
-    total_demand = segments.segment_sum(jnp.where(occ, cl_cores_f, 0.0), seg, V)
+    total_demand = segments.segment_sum(
+        jnp.where(occ_leg, cl_cores_f, 0.0), seg, V)
     denom = jnp.maximum(total_demand, vms.cores.astype(jnp.float32))
     share = vm_mips / jnp.maximum(denom, 1e-9)           # per demanded core
-    time = jnp.where(occ, share[vmi], 0.0)
+    time = jnp.where(occ_leg, share[vmi], 0.0)
 
     rate = jnp.where(scn.policy.vm_policy == TIME_SHARED, time, space)
+
+    # --- continuous-batching decode (DESIGN.md §14) ---
+    # An admitted serving row decodes as a member of its VM's batch: per-step
+    # rate is the per-core capacity degraded by 1 / (1 + alpha * (b - 1)) for
+    # a decode batch of b.  A row awaiting KV-block admission makes no
+    # progress.  All-False masks keep non-serving scenarios bitwise.
+    occ_srv = occ & is_serving & state.cl_admitted
+    seg_srv = jnp.where(occ_srv, vmi, V)
+    batch = segments.segment_sum(occ_srv.astype(jnp.float32), seg_srv, V)
+    slow = 1.0 + scn.policy.batch_degradation * jnp.maximum(batch - 1.0, 0.0)
+    srv_rate = percore_capacity[vmi] / jnp.maximum(slow[vmi], 1e-9)
+    rate = jnp.where(is_serving, jnp.where(occ_srv, srv_rate, 0.0), rate)
+
     # A cloudlet only runs while its VM is granted capacity.
     rate = jnp.where(vm_mips[vmi] > 0, rate, 0.0)
     return rate, vm_mips

@@ -41,6 +41,7 @@ def _return_resources(scn: Scenario, state: SimState, newly: Array) -> SimState:
         free_storage=state.free_storage.at[d, h].add(w * scn.vms.storage_mb),
         free_bw=state.free_bw.at[d, h].add(w * scn.vms.bw_mbps),
         free_cores=state.free_cores.at[d, h].add(w * scn.vms.cores),
+        free_kv=state.free_kv.at[d, h].add(w * scn.vms.kv_blocks),
     )
 
 
@@ -150,11 +151,17 @@ def apply_outages(scn: Scenario, state: SimState) -> SimState:
         vm_evicted=(state.vm_evicted & ~recovered) | evict,
         rem_mi=new_rem,
         cl_rollback_mi=state.cl_rollback_mi + (new_rem - state.rem_mi),
+        # A failure wipes the host's accelerator memory: evicted serving rows
+        # lose their KV blocks and re-admit (re-prefilling) once their VM is
+        # re-placed (DESIGN.md §14).
+        cl_admitted=state.cl_admitted & ~cl_evict,
+        cl_kv=jnp.where(cl_evict, 0.0, state.cl_kv),
         free_ram=ledger(state.free_ram, hosts.ram_mb),
         free_storage=ledger(state.free_storage, hosts.storage_mb),
         free_bw=ledger(state.free_bw, hosts.bw_mbps),
         free_cores=ledger(
             state.free_cores, hosts.cores.astype(jnp.float32)),
+        free_kv=ledger(state.free_kv, hosts.kv_blocks),
     )
 
 
@@ -169,6 +176,7 @@ def resource_feasible(scn: Scenario, state: SimState, v: Array) -> Array:
         & (state.free_ram >= vms.ram_mb[v])
         & (state.free_storage >= vms.storage_mb[v])
         & (state.free_bw >= vms.bw_mbps[v])
+        & (state.free_kv >= vms.kv_blocks[v])
     )
 
 
@@ -326,6 +334,7 @@ def provision_due_vms(scn: Scenario, state: SimState) -> tuple[SimState, Array]:
             ),
             free_bw=st.free_bw.at[dsafe, hsafe].add(-w * vms.bw_mbps[v]),
             free_cores=st.free_cores.at[dsafe, hsafe].add(-w * vms.cores[v]),
+            free_kv=st.free_kv.at[dsafe, hsafe].add(-w * vms.kv_blocks[v]),
             # market: RAM + storage billed at creation (paper §3.3); the
             # migrated image transits the inter-DC link -> bandwidth bill.
             ram_cost=st.ram_cost.at[dsafe].add(
@@ -451,6 +460,7 @@ def live_migrate(
             -w * vms.storage_mb[v]),
         free_bw=state.free_bw.at[dsafe, hsafe].add(-w * vms.bw_mbps[v]),
         free_cores=state.free_cores.at[dsafe, hsafe].add(-w * vms.cores[v]),
+        free_kv=state.free_kv.at[dsafe, hsafe].add(-w * vms.kv_blocks[v]),
         bw_cost=state.bw_cost.at[dsafe].add(
             w * vms.image_mb[v] * scn.market.cost_per_bw_mb[dsafe]),
     )

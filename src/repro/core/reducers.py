@@ -195,6 +195,54 @@ class HistogramReducer(CampaignReducer):
 
 
 @dataclasses.dataclass(frozen=True)
+class LatencyHistogramReducer(HistogramReducer):
+    """Serving tail latency pooled across the whole campaign: per-*request*
+    TTFT or TPOT values (``[B, C]``, not the usual per-row scalar) folded
+    into one fixed-bin histogram (DESIGN.md §14).
+
+    ``metric`` selects the latency: ``"ttft"`` is ``start_t - submit_t``
+    (queueing + KV-admission delay until the first decode step),
+    ``"tpot"`` is ``(finish_t - start_t) / max_new_tokens`` (observed
+    per-token pace, preemption stalls included).  Only *finished serving*
+    rows of *valid* scenario rows scatter; everything else drops out of
+    bounds.  Counts are integer scatters — bitwise chunk-order invariant —
+    and the inherited quantile finalize is exact to one bin width, so a
+    million-scenario sweep gets fleet-wide p50/p99 tail latency without
+    materializing a single per-row result.
+    """
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.metric not in ("ttft", "tpot"):
+            raise ValueError(
+                f"metric must be 'ttft' or 'tpot', got {self.metric!r}"
+            )
+
+    def init(self, chunk_avals, res_avals):
+        # per-request values: no [B]-rank validation of the base class
+        return jnp.zeros((self.bins,), jnp.int32)
+
+    def fold(self, carry, chunk, res, index, valid):
+        cls = chunk.cloudlets
+        served = (
+            cls.exists & (cls.prompt_tokens > 0.0)
+            & (res.finish_t < INF / 2)
+        )                                                        # [B, C]
+        if self.metric == "ttft":
+            v = res.start_t - cls.submit_t
+        else:
+            v = (res.finish_t - res.start_t) / jnp.maximum(
+                cls.max_new_tokens, 1.0
+            )
+        width = (self.hi - self.lo) / self.bins
+        idx = jnp.clip(((v - self.lo) / width).astype(jnp.int32),
+                       0, self.bins - 1)
+        keep = served & valid[:, None]
+        idx = jnp.where(keep, idx, self.bins)    # drop out of bounds
+        return carry.at[idx].add(1, mode="drop")
+
+
+@dataclasses.dataclass(frozen=True)
 class ArgBestReducer(CampaignReducer):
     """Best scenario row by a scalar metric, carrying its ``Policy`` row.
 

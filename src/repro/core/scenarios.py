@@ -62,6 +62,8 @@ def make_policy(
     evacuation: bool = False,
     evac_lead_s: float = 60.0,
     locality_dispatch: bool = False,
+    block_tokens: float = 16.0,
+    batch_degradation: float = 0.0,
 ) -> Policy:
     """Build a ``Policy`` from Python values, casting every knob to its
     traced array dtype.
@@ -96,6 +98,8 @@ def make_policy(
         evacuation=jnp.asarray(evacuation, bool),
         evac_lead_s=jnp.asarray(evac_lead_s, jnp.float32),
         locality_dispatch=jnp.asarray(locality_dispatch, bool),
+        block_tokens=jnp.asarray(block_tokens, jnp.float32),
+        batch_degradation=jnp.asarray(batch_degradation, jnp.float32),
     )
 
 
@@ -107,6 +111,7 @@ def uniform_hosts(
     ram_mb: float = 1024.0,
     storage_mb: float = 2_000_000.0,
     bw_mbps: float = 1000.0,
+    kv_blocks: float = 0.0,
     exists: np.ndarray | None = None,
 ) -> Hosts:
     """Homogeneous ``[n_dc, hosts_per_dc]`` host grid.
@@ -123,6 +128,7 @@ def uniform_hosts(
         ram_mb=jnp.full(shape, ram_mb, _F),
         storage_mb=jnp.full(shape, storage_mb, _F),
         bw_mbps=jnp.full(shape, bw_mbps, _F),
+        kv_blocks=jnp.full(shape, kv_blocks, _F),
         exists=jnp.asarray(ex),
     )
 
@@ -135,6 +141,7 @@ def uniform_vms(
     ram_mb: float = 512.0,
     storage_mb: float = 1024.0,
     bw_mbps: float = 100.0,
+    kv_blocks: float = 0.0,
     request_t: float | np.ndarray = 0.0,
     image_mb: float = 1024.0,
     pool: bool | np.ndarray = False,
@@ -153,6 +160,7 @@ def uniform_vms(
         ram_mb=jnp.full((n,), ram_mb, _F),
         storage_mb=jnp.full((n,), storage_mb, _F),
         bw_mbps=jnp.full((n,), bw_mbps, _F),
+        kv_blocks=jnp.full((n,), kv_blocks, _F),
         request_t=jnp.broadcast_to(jnp.asarray(request_t, _F), (n,)),
         image_mb=jnp.full((n,), image_mb, _F),
         exists=jnp.ones((n,), bool),
@@ -181,6 +189,8 @@ def make_cloudlets(
     output_mb: float = 0.3,
     deadline: np.ndarray | float = 3.0e38,
     input_dc: int | np.ndarray = -1,
+    prompt_tokens: float | np.ndarray = 0.0,
+    max_new_tokens: float | np.ndarray = 0.0,
 ) -> Cloudlets:
     """Rows are re-sorted by (submit_t, row) — FCFS is row order downstream.
 
@@ -198,6 +208,8 @@ def make_cloudlets(
     deadline = np.broadcast_to(np.asarray(deadline, _F), (n,))
     input_mb = np.broadcast_to(np.asarray(input_mb, _F), (n,))
     input_dc = np.broadcast_to(np.asarray(input_dc, _I), (n,))
+    prompt_tokens = np.broadcast_to(np.asarray(prompt_tokens, _F), (n,))
+    max_new_tokens = np.broadcast_to(np.asarray(max_new_tokens, _F), (n,))
     order = np.argsort(submit_t, kind="stable")
     return Cloudlets(
         vm=jnp.asarray(vm[order]),
@@ -208,6 +220,8 @@ def make_cloudlets(
         input_dc=jnp.asarray(input_dc[order]),
         output_mb=jnp.full((n,), output_mb, _F),
         deadline=jnp.asarray(deadline[order]),
+        prompt_tokens=jnp.asarray(prompt_tokens[order]),
+        max_new_tokens=jnp.asarray(max_new_tokens[order]),
         exists=jnp.ones((n,), bool),
     )
 
@@ -687,3 +701,87 @@ def staging_scenario(*, n_dc: int = 3, hosts_per_dc: int = 2,
                                   bw_mbps=bw_mbps),
         max_steps=max_steps,
     )
+
+
+# ---------------------------------------------------------------------------
+# LLM-serving scenario (KV-bound continuous batching, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def serving_scenario(key, *, n_requests: int = 64, n_replicas: int = 4,
+                     n_pool: int = 0, kv_blocks: float = 64.0,
+                     rate: float = 0.5, kind: str = "diurnal",
+                     block_tokens: float = 16.0,
+                     batch_degradation: float = 0.05,
+                     mips: float = 1000.0, token_mi: float = 10.0,
+                     median_prompt: float = 128.0, median_new: float = 64.0,
+                     autoscale: bool = False,
+                     scale_up_thresh: float = 0.75,
+                     scale_down_thresh: float = 0.0,
+                     sensor_interval: float = 50.0, boot_s: float = 30.0,
+                     deadline_rel: float | None = None,
+                     horizon: float = 1e6,
+                     max_steps: int | None = None, **gen_kw) -> Scenario:
+    """A simulated LLM-inference fleet: seeded diurnal/bursty request
+    traffic over ``n_replicas`` serving replicas (one accelerator host
+    each, ``kv_blocks`` KV-cache blocks), scheduled with KV-bound
+    continuous batching (DESIGN.md §14).
+
+    Requests are service-routed token-generation cloudlets
+    (``workload.generate_serving_requests``): the broker spreads arrivals
+    over replicas, each replica admits requests FCFS while their KV
+    footprint fits its pool, decodes them as one batch whose per-request
+    rate degrades by ``1/(1 + batch_degradation * (b - 1))``, and preempts
+    youngest-first on block exhaustion (rollback to the last emitted
+    token).  ``n_pool`` spare replicas ride the PR-3 threshold autoscaler
+    (``autoscale`` gates it, traced); ``deadline_rel`` attaches per-request
+    SLA deadlines so the PR-5 violation ledger scores tail latency.
+
+    ``rate``, ``kv_blocks`` and the autoscale thresholds are traced data:
+    one compiled program serves a rate x kv_blocks x threshold campaign
+    (``broadcast_campaign`` + batch-major drivers), with TTFT/TPOT
+    percentiles per row in the reduced ``SimResult``.
+    """
+    from repro.core import workload
+    from repro.core.step import AutoscaleInstrument
+
+    n_vms = n_replicas + n_pool
+    hosts = uniform_hosts(1, n_vms, cores=1, mips=mips, ram_mb=8192.0,
+                          storage_mb=2_000_000.0, kv_blocks=kv_blocks)
+    vms = uniform_vms(n_vms, mips=mips, ram_mb=512.0, storage_mb=1024.0,
+                      kv_blocks=kv_blocks,
+                      pool=np.arange(n_vms) >= n_replicas)
+    cls = workload.generate_serving_requests(
+        key, n_requests, kind=kind, rate=rate, token_mi=token_mi,
+        median_prompt=median_prompt, median_new=median_new,
+        deadline_rel=deadline_rel, **gen_kw)
+    pol = make_policy(
+        host_policy=SPACE_SHARED, vm_policy=SPACE_SHARED,
+        core_reserving=True, horizon=horizon,
+        sensor_interval=sensor_interval, migration_fixed_s=boot_s,
+        autoscale=autoscale, scale_up_thresh=scale_up_thresh,
+        scale_down_thresh=scale_down_thresh,
+        block_tokens=block_tokens, batch_degradation=batch_degradation)
+    if max_steps is None:
+        # arrivals/dispatch/completions + one K_SERVING stop per KV-block
+        # boundary (~max_new/block_tokens per request, headroom for the
+        # lognormal tail and preempt/re-admit churn) + autoscale ticks over
+        # a generous active-span estimate.  Static Python ints only — the
+        # traced knobs (rate, kv_blocks, thresholds) never enter here.
+        try:
+            rate_f = float(rate)
+        except TypeError as exc:   # traced rate: the step budget must be given
+            raise ValueError(
+                "serving_scenario: pass max_steps explicitly when rate is "
+                "traced (the step budget is static jit metadata)"
+            ) from exc
+        boundary = int(
+            n_requests * (4.0 * median_new / max(block_tokens, 1.0) + 6.0))
+        span = 2.0 * n_requests / max(rate_f, 1e-6) + (
+            4.0 * n_requests * median_new * token_mi
+            / (mips * max(n_replicas, 1)))
+        max_steps = (4 * (n_requests + n_vms) + boundary
+                     + int(span / sensor_interval) + 400)
+    return Scenario(hosts=hosts, vms=vms, cloudlets=cls,
+                    market=uniform_market(1), policy=pol,
+                    instruments=(AutoscaleInstrument(),),
+                    max_steps=max_steps)

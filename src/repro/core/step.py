@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax import Array
 
-from repro.core import policies, provision, segments
+from repro.core import kvserve, policies, provision, segments
 from repro.kernels import ops as _kernel_ops
 from repro.core.entities import (
     INF,
@@ -53,6 +53,7 @@ K_SCALE = 7        # an autoscaler evaluation tick (AutoscaleInstrument)
 K_FAILURE = 8      # a scheduled host failure (Scenario.outages)
 K_REPAIR = 9       # a failed host came back (empty)
 K_STAGE = 10       # a pending data stage-in became openable (topology only)
+K_SERVING = 11     # a decoding request crossed a KV-block boundary (§14)
 
 # Named scopes wrapping the phase-skip ``lax.cond``s.  The names land in the
 # optimized HLO's op metadata (``op_name=.../phase_provision/cond``), which is
@@ -62,9 +63,10 @@ K_STAGE = 10       # a pending data stage-in became openable (topology only)
 SCOPE_PROVISION = "phase_provision"
 SCOPE_DISPATCH = "phase_dispatch"
 SCOPE_TRANSFER = "phase_transfer"
+SCOPE_SERVING = "phase_serving"
 # SCOPE_TRANSFER only exists in programs traced with a topology attached;
-# simlint's lint scenarios carry one so R1 covers all three phases.
-PHASE_SCOPES = (SCOPE_PROVISION, SCOPE_DISPATCH, SCOPE_TRANSFER)
+# simlint's lint scenarios carry one so R1 covers all four phases.
+PHASE_SCOPES = (SCOPE_PROVISION, SCOPE_DISPATCH, SCOPE_TRANSFER, SCOPE_SERVING)
 
 
 def default_max_steps(scn: Scenario) -> int:
@@ -825,7 +827,7 @@ def _cand_kinds(scn: Scenario, instruments: tuple) -> Array:
     """Static event-kind classification aligned with ``_phase_bound``'s
     candidate times (same per scenario row — shapes and instrument tuples
     are static across a campaign)."""
-    cand_k = [K_READY, K_READY, K_VM_REQUEST, K_MIGRATION]
+    cand_k = [K_READY, K_READY, K_VM_REQUEST, K_MIGRATION, K_SERVING]
     if scn.topology is not None:
         cand_k.append(K_STAGE)
     if scn.outages is not None:
@@ -861,6 +863,9 @@ def _phase_bound(
         _min_where(cls.submit_t, undispatched),
         _min_where(vms.request_t, unplaced),
         _min_where(st.vm_avail_t, migrating),
+        # decoding requests stop the clock at KV-block boundaries so cache
+        # growth — and preemption-on-exhaustion — lands on exact edges
+        kvserve.serving_bound(scn, st, rate),
     ]
     if scn.topology is not None:
         # a bound network stage-in submitted in the future must wake the
@@ -1001,6 +1006,16 @@ def event_step(
                 st,
             )
 
+    # --- KV-block ledger sweep: release / growth / eviction / admission
+    #     for LLM-serving rows; skipped (and bitwise inert) without any ---
+    with jax.named_scope(SCOPE_SERVING):
+        st = jax.lax.cond(
+            kvserve.serving_needed(scn, st),
+            lambda s: kvserve.serving_phase(scn, s),
+            lambda s: s,
+            st,
+        )
+
     rate, vm_mips, active, bound_dt, cand_ts = _phase_bound(
         scn, st, aux, instruments
     )
@@ -1110,6 +1125,15 @@ def batch_event_step(
                 st3,
             )
 
+    need_srv = jnp.any(jax.vmap(kvserve.serving_needed)(scn_b, st3) & live)
+    with jax.named_scope(SCOPE_SERVING):
+        st3 = jax.lax.cond(
+            need_srv,
+            lambda s: jax.vmap(kvserve.serving_phase)(scn_b, s),
+            lambda s: s,
+            st3,
+        )
+
     def bound(scn, st, aux):
         return _phase_bound(scn, st, aux, instruments_for(scn, extras))
 
@@ -1148,6 +1172,17 @@ def finalize_outputs_for(
     return out
 
 
+def _masked_pct(x: Array, mask: Array, q: float) -> Array:
+    """Nearest-rank percentile of ``x`` over ``mask`` rows; INF when empty."""
+    xs = jnp.sort(jnp.where(mask, x, INF))
+    k = jnp.sum(mask.astype(jnp.int32))
+    idx = jnp.clip(
+        jnp.ceil(q * k.astype(jnp.float32)).astype(jnp.int32) - 1,
+        0, x.shape[0] - 1,
+    )
+    return jnp.where(k > 0, xs[idx], INF)
+
+
 def finalize_result(scn: Scenario, st: SimState) -> SimResult:
     """Assemble the reported outcome from a final state (shared by drivers)."""
     cls = scn.cloudlets
@@ -1158,6 +1193,16 @@ def finalize_result(scn: Scenario, st: SimState) -> SimResult:
     makespan = jnp.max(jnp.where(fin, st.finish_t, -INF), initial=-INF)
     total_cost = jnp.sum(
         st.cpu_cost + st.ram_cost + st.storage_cost + st.bw_cost
+    )
+    # serving tail latency (DESIGN.md §14): TTFT is queueing + KV admission
+    # delay until the first decode step; TPOT the observed per-token pace
+    # including any preemption stalls.  INF marks "no finished serving rows".
+    sfin = fin & (cls.prompt_tokens > 0.0)
+    ttft = jnp.where(sfin, st.start_t - cls.submit_t, INF)
+    tpot = jnp.where(
+        sfin,
+        (st.finish_t - st.start_t) / jnp.maximum(cls.max_new_tokens, 1.0),
+        INF,
     )
     return SimResult(
         finish_t=st.finish_t,
@@ -1183,6 +1228,10 @@ def finalize_result(scn: Scenario, st: SimState) -> SimResult:
             policies.sla_violation_mask(scn, st).astype(jnp.int32)),
         downtime=jnp.sum(st.vm_downtime),
         n_evacuations=st.n_evacuations,
+        ttft_p50=_masked_pct(ttft, sfin, 0.50),
+        ttft_p99=_masked_pct(ttft, sfin, 0.99),
+        tpot_p50=_masked_pct(tpot, sfin, 0.50),
+        tpot_p99=_masked_pct(tpot, sfin, 0.99),
     )
 
 

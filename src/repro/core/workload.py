@@ -161,12 +161,15 @@ def lognormal(key: Array, n: int, median, sigma) -> Array:
 def assemble_cloudlets(
     vm: Array, length_mi: Array, submit_t: Array,
     cores=1, input_mb=0.0, output_mb=0.0, deadline=INF, input_dc=-1,
+    prompt_tokens=0.0, max_new_tokens=0.0,
 ) -> Cloudlets:
     """Traced twin of ``scenarios.make_cloudlets``: jnp sort by submit time
     (FCFS is row order downstream), everything vmappable.  ``deadline`` is
     the absolute SLA finish time (INF: none); ``input_dc >= 0`` declares the
     datacenter holding the row's input data (stage-in becomes a network
-    transfer, DESIGN.md §13)."""
+    transfer, DESIGN.md §13); ``prompt_tokens > 0`` marks a serving row
+    generating ``max_new_tokens`` tokens against a KV-block budget
+    (DESIGN.md §14)."""
     n = submit_t.shape[0]
     order = jnp.argsort(submit_t, stable=True)
     bcast = lambda x, dt: jnp.broadcast_to(jnp.asarray(x, dt), (n,))[order]
@@ -179,6 +182,8 @@ def assemble_cloudlets(
         input_dc=bcast(input_dc, jnp.int32),
         output_mb=bcast(output_mb, jnp.float32),
         deadline=bcast(deadline, jnp.float32),
+        prompt_tokens=bcast(prompt_tokens, jnp.float32),
+        max_new_tokens=bcast(max_new_tokens, jnp.float32),
         exists=jnp.ones((n,), bool),
     )
 
@@ -244,4 +249,67 @@ def generate_cloudlets(
     return assemble_cloudlets(
         vm, length, submit, cores=cores, input_mb=input_mb,
         output_mb=output_mb, deadline=deadline,
+    )
+
+
+def generate_serving_requests(
+    key: Array,
+    n: int,
+    *,
+    kind: str = "diurnal",
+    rate=1.0,
+    amp=0.8,
+    period=1000.0,
+    n_bursts: int = 4,
+    off_gap_mean=500.0,
+    median_prompt=128.0,
+    sigma_prompt=0.7,
+    median_new=64.0,
+    sigma_new=0.6,
+    max_new_cap=1024.0,
+    token_mi=10.0,
+    sigma_token=0.2,
+    deadline_rel=None,
+) -> Cloudlets:
+    """One seeded LLM-inference request stream -> serving ``Cloudlets``
+    (DESIGN.md §14).
+
+    Arrivals reuse the §7 grammar (``kind`` = poisson/diurnal/bursty at
+    ``rate`` requests/s); prompt and decode lengths are lognormal token
+    counts (rounded up to whole tokens, decode clipped to ``max_new_cap``),
+    and each request's per-token service cost is ``token_mi`` MI jittered by
+    ``sigma_token`` in log space — so ``length_mi = max_new_tokens x
+    per-token MI`` and the engine recovers the per-token cost exactly.
+    All distribution parameters are traced: a campaign vmaps
+    ``(key, rate, median_prompt, ...)`` grids through one compilation.
+    Rows are service-routed (``vm == -1``): the broker dispatches each
+    arrival to the least-loaded serving replica, which is how the
+    autoscaler's pool replicas absorb traffic.
+    """
+    k_arr, k_prompt, k_new, k_tok = jax.random.split(key, 4)
+    if kind == "poisson":
+        submit = poisson_arrivals(k_arr, n, rate)
+    elif kind == "diurnal":
+        submit = diurnal_arrivals(k_arr, n, rate, amp=amp, period=period)
+    elif kind == "bursty":
+        if n % n_bursts:
+            raise ValueError(f"n={n} not divisible by n_bursts={n_bursts}")
+        submit = bursty_arrivals(
+            k_arr, n_bursts, n // n_bursts, rate, off_gap_mean)
+    else:
+        raise ValueError(f"unknown arrival kind {kind!r}")
+
+    prompt = jnp.maximum(
+        jnp.ceil(lognormal(k_prompt, n, median_prompt, sigma_prompt)), 1.0)
+    new = jnp.clip(
+        jnp.ceil(lognormal(k_new, n, median_new, sigma_new)),
+        1.0, jnp.asarray(max_new_cap, jnp.float32))
+    per_token = lognormal(k_tok, n, token_mi, sigma_token)
+    deadline = (
+        INF if deadline_rel is None
+        else submit + jnp.asarray(deadline_rel, jnp.float32)
+    )
+    return assemble_cloudlets(
+        jnp.full((n,), -1, jnp.int32), new * per_token, submit,
+        deadline=deadline, prompt_tokens=prompt, max_new_tokens=new,
     )

@@ -1,5 +1,19 @@
 """repro.serving — continuous batching driven by the CloudSim policy engine."""
+from repro.serving.capacity import (
+    kv_blocks_per_device,
+    kv_bytes_per_token,
+    n_attn_layers,
+)
 from repro.serving.engine import ServingEngine
 from repro.serving.scheduler import Request, SlotScheduler, choose_policy, queue_scenario
 
-__all__ = ["ServingEngine", "Request", "SlotScheduler", "choose_policy", "queue_scenario"]
+__all__ = [
+    "ServingEngine",
+    "Request",
+    "SlotScheduler",
+    "choose_policy",
+    "queue_scenario",
+    "kv_blocks_per_device",
+    "kv_bytes_per_token",
+    "n_attn_layers",
+]

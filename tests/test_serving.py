@@ -57,3 +57,31 @@ def test_queue_scenario_shapes():
                          vm_policy=TIME_SHARED)
     assert scn.cloudlets.n_cloudlets == 1
     assert float(scn.hosts.mips[0, 0]) == 50.0
+
+
+# --- capacity planning (repro.serving.capacity, DESIGN.md §14) ---
+
+def test_kv_bytes_per_token_counts_attention_layers_only():
+    from repro.serving import capacity
+
+    cfg = get_config("internlm2-1.8b")
+    n_attn = capacity.n_attn_layers(cfg)
+    assert 0 < n_attn <= cfg.n_layers
+    expect = 2 * n_attn * cfg.n_kv_heads * cfg.d_head * (
+        2 if cfg.dtype in ("bfloat16", "float16") else 4)
+    assert capacity.kv_bytes_per_token(cfg) == expect
+
+
+def test_kv_blocks_per_device_monotone_in_hbm():
+    from repro.serving import capacity
+
+    cfg = get_config("internlm2-1.8b")
+    small = capacity.kv_blocks_per_device(cfg, 16e9)
+    large = capacity.kv_blocks_per_device(cfg, 80e9)
+    assert 0 < small < large
+    # weights alone overflow a tiny device: zero blocks, not negative
+    assert capacity.kv_blocks_per_device(cfg, 1e6) == 0
+    # halving block_tokens doubles the block count (same byte budget)
+    b16 = capacity.kv_blocks_per_device(cfg, 80e9, block_tokens=16)
+    b8 = capacity.kv_blocks_per_device(cfg, 80e9, block_tokens=8)
+    assert abs(b8 - 2 * b16) <= 1

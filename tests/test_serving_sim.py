@@ -1,0 +1,267 @@
+"""KV-cache-bound continuous batching (DESIGN.md §14).
+
+Covers the serving tentpole end to end:
+
+* hand-computed admission interleave and batch-degradation timing,
+* preemption-on-exhaustion (youngest-first) with token-boundary rollback,
+* KV-block conservation — VM pools and the host ledger — through
+  preempt/re-admit churn, probed at every event by an instrument,
+* driver equivalence (simulate == simulate_trace == batch-major, bitwise)
+  with serving cloudlets firing,
+* serving-off inertness: scenarios without serving rows report the INF
+  sentinels and zero serving state while legacy fields match the analytic
+  fig4 values exactly.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import campaign, engine, kvserve, reducers, segments
+from repro.core import step as step_mod
+from repro.core.entities import INF, SPACE_SHARED, Scenario
+from repro.core.pytree import pytree_dataclass
+from repro.core.scenarios import (
+    fig4_scenario,
+    make_cloudlets,
+    make_policy,
+    serving_scenario,
+    uniform_hosts,
+    uniform_market,
+    uniform_vms,
+)
+
+pytestmark = pytest.mark.tier1
+
+
+def _serving_fixture(*, kv_blocks, block_tokens=4.0, batch_degradation=0.0,
+                     prompts=(4.0, 4.0), max_new=(8.0, 8.0), mips=100.0,
+                     token_mi=10.0, submit=None):
+    """One host / one VM / fixed-binding serving rows — small enough to
+    hand-compute every admission, boundary and completion."""
+    n = len(prompts)
+    hosts = uniform_hosts(1, 1, cores=1, mips=mips, ram_mb=4096.0,
+                          kv_blocks=kv_blocks)
+    vms = uniform_vms(1, cores=1, mips=mips, ram_mb=1024.0,
+                      kv_blocks=kv_blocks)
+    max_new = np.asarray(max_new, np.float32)
+    cls = make_cloudlets(
+        np.zeros(n, np.int32), max_new * token_mi,
+        np.zeros(n) if submit is None else np.asarray(submit),
+        input_mb=0.0, output_mb=0.0,
+        prompt_tokens=np.asarray(prompts, np.float32),
+        max_new_tokens=max_new,
+    )
+    pol = make_policy(host_policy=SPACE_SHARED, vm_policy=SPACE_SHARED,
+                      block_tokens=block_tokens,
+                      batch_degradation=batch_degradation)
+    return Scenario(hosts=hosts, vms=vms, cloudlets=cls,
+                    market=uniform_market(1), policy=pol, max_steps=400)
+
+
+@pytree_dataclass
+class KVProbe(step_mod.Instrument):
+    """Max pool overshoot / host-ledger violation / final rollback observed
+    across every event — the conservation invariants, probed in-loop."""
+
+    name = "kvprobe"
+
+    def init(self, scn):
+        z = jnp.asarray(0.0, jnp.float32)
+        return (z, z, z, jnp.asarray(0, jnp.int32))
+
+    def post(self, scn, st, ev, aux):
+        pool_over, host_over, _rollback, evictions = aux
+        V = scn.vms.n_vms
+        vmi = jnp.clip(st.cl_vm, 0, V - 1)
+        seg = jnp.where(st.cl_admitted, vmi, V)
+        usage = segments.segment_sum(
+            jnp.where(st.cl_admitted, st.cl_kv, 0.0), seg, V)
+        pool_over = jnp.maximum(
+            pool_over, jnp.max(usage - scn.vms.kv_blocks))
+        ledger_bad = jnp.maximum(
+            -st.free_kv, st.free_kv - scn.hosts.kv_blocks)
+        host_over = jnp.maximum(host_over, jnp.max(ledger_bad))
+        return st, (pool_over, host_over,
+                    jnp.sum(st.cl_rollback_mi), evictions)
+
+    def finalize(self, scn, st, aux):
+        return {"pool_over": aux[0], "host_over": aux[1],
+                "rollback": aux[2]}
+
+
+def _assert_results_identical(res_a, res_b):
+    for f in dataclasses.fields(res_a):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res_a, f.name)),
+            np.asarray(getattr(res_b, f.name)),
+            err_msg=f"SimResult.{f.name} differs",
+        )
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching honesty: hand-computed timings
+# ---------------------------------------------------------------------------
+
+class TestBatchingSemantics:
+    def test_batch_degradation_two_requests(self):
+        # both admitted at t=0, batch of 2, alpha=0.5 -> each decodes at
+        # 100 / 1.5 MIPS; 8 tokens x 10 MI finish at 80 / (100/1.5) = 1.2 s
+        scn = _serving_fixture(kv_blocks=32.0, batch_degradation=0.5)
+        res = jax.jit(engine.simulate)(scn)
+        assert int(res.n_finished) == 2
+        np.testing.assert_allclose(
+            np.asarray(res.finish_t), [1.2, 1.2], rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(res.start_t), [0.0, 0.0])
+        np.testing.assert_allclose(float(res.tpot_p50), 0.15, rtol=1e-4)
+
+    def test_solo_decode_is_undegraded(self):
+        scn = _serving_fixture(kv_blocks=32.0, batch_degradation=0.5,
+                               prompts=(4.0,), max_new=(8.0,))
+        res = jax.jit(engine.simulate)(scn)
+        np.testing.assert_allclose(np.asarray(res.finish_t), [0.8], rtol=1e-4)
+
+    def test_admission_interleave_hand_computed(self):
+        # pool of 3 blocks, 2 blocks per fresh request (prompt 4 + open
+        # block @ 4 tokens/block): r0 admits alone, r1 waits.  r0 decodes
+        # 8 tokens at 100 MIPS (0.8 s), releases, r1 admits at the
+        # completion event and finishes 0.8 s later.  TTFT(r1) = 0.8.
+        scn = _serving_fixture(kv_blocks=3.0)
+        res = jax.jit(engine.simulate)(scn)
+        assert int(res.n_finished) == 2
+        np.testing.assert_allclose(
+            np.asarray(res.start_t), [0.0, 0.8], rtol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(res.finish_t), [0.8, 1.6], rtol=1e-4)
+        np.testing.assert_allclose(float(res.ttft_p99), 0.8, rtol=1e-4)
+
+    def test_preemption_on_exhaustion_youngest_first(self):
+        # pool of 5, both requests admit with 2 blocks; at the first block
+        # boundary (4 tokens, t=0.4) both need 3 -> 6 > 5, so the YOUNGER
+        # row r1 is evicted at its token boundary (zero re-done work), r0
+        # finishes alone at 1.2, r1 re-admits and finishes at 2.0.
+        scn = _serving_fixture(kv_blocks=5.0, max_new=(12.0, 12.0))
+        probe = KVProbe()
+        res, out = jax.jit(
+            lambda s: engine.simulate_instrumented(s, (probe,)),
+        )(scn)
+        assert int(res.n_finished) == 2
+        np.testing.assert_allclose(
+            np.asarray(res.finish_t), [1.2, 2.0], rtol=1e-4)
+        # eviction landed exactly on a token boundary: no re-done work
+        np.testing.assert_allclose(float(out["kvprobe"]["rollback"]), 0.0,
+                                   atol=1e-3)
+        # conservation held through the preempt/re-admit churn
+        assert float(out["kvprobe"]["pool_over"]) <= 1e-4
+        assert float(out["kvprobe"]["host_over"]) <= 1e-4
+
+
+# ---------------------------------------------------------------------------
+# KV-block conservation under sustained pressure
+# ---------------------------------------------------------------------------
+
+class TestKVConservation:
+    def test_pressured_fleet_never_oversubscribes(self):
+        scn = serving_scenario(
+            jax.random.PRNGKey(3), n_requests=32, n_replicas=2,
+            kv_blocks=24.0, rate=2.0, batch_degradation=0.1,
+            median_prompt=64.0, median_new=48.0)
+        probe = KVProbe()
+        res, out = jax.jit(
+            lambda s: engine.simulate_instrumented(s, (probe,)),
+        )(scn)
+        assert int(res.n_finished) > 0
+        assert float(out["kvprobe"]["pool_over"]) <= 1e-4
+        assert float(out["kvprobe"]["host_over"]) <= 1e-4
+
+    def test_blocks_needed_matches_paged_attention_count(self):
+        scn = _serving_fixture(kv_blocks=32.0, prompts=(4.0, 9.0),
+                               max_new=(8.0, 8.0))
+        st = engine.init_state(scn)
+        need = np.asarray(kvserve.blocks_needed(scn, st))
+        # prompt 4 @ 4/block -> 1 full block + open block = 2;
+        # prompt 9 -> ceil(9/4)=3 filled (one partial) + ... floor(9.1/4)+1=3
+        np.testing.assert_allclose(need, [2.0, 3.0])
+
+
+# ---------------------------------------------------------------------------
+# driver equivalence with serving cloudlets firing
+# ---------------------------------------------------------------------------
+
+class TestDriverEquivalence:
+    def _scn(self):
+        return serving_scenario(
+            jax.random.PRNGKey(11), n_requests=24, n_replicas=2, n_pool=1,
+            kv_blocks=24.0, rate=1.5, autoscale=True,
+            batch_degradation=0.1, median_prompt=64.0, median_new=48.0)
+
+    def test_simulate_equals_trace_and_history(self):
+        scn = self._scn()
+        res = jax.jit(engine.simulate)(scn)
+        assert int(res.n_finished) > 0
+        assert float(res.ttft_p50) < INF / 2   # serving metrics populated
+        res_tr, _ = jax.jit(engine.simulate_trace)(
+            scn, jnp.asarray([5.0, 20.0], jnp.float32))
+        _assert_results_identical(res, res_tr)
+        res_h, hist = engine.simulate_history(scn)
+        _assert_results_identical(res, res_h)
+        # K_SERVING boundary stops actually fired in the event stream
+        kinds = np.asarray(hist.kind)[np.asarray(hist.valid)]
+        assert (kinds == step_mod.K_SERVING).sum() > 0
+
+    def test_batch_major_rows_bitwise_match_solo(self):
+        rows = [
+            serving_scenario(
+                jax.random.PRNGKey(11), n_requests=24, n_replicas=2,
+                n_pool=1, kv_blocks=kv, rate=1.5, autoscale=True,
+                scale_up_thresh=th, batch_degradation=0.1,
+                median_prompt=64.0, median_new=48.0, max_steps=1500)
+            for kv in (16.0, 32.0) for th in (0.6, 0.9)
+        ]
+        batched = campaign.stack_scenarios(rows)
+        res_b = jax.jit(engine.simulate)(batched)
+        for i, row in enumerate(rows):
+            solo = jax.jit(engine.simulate)(row)
+            _assert_results_identical(
+                jax.tree.map(lambda x: x[i], res_b), solo)
+
+    def test_latency_reducer_pools_requests(self):
+        rows = [self._scn() for _ in range(3)]
+        batched = campaign.stack_scenarios(rows)
+        out = campaign.run_campaign(batched, chunk_size=2, reduce={
+            "ttft": reducers.LatencyHistogramReducer(
+                "ttft", lo=0.0, hi=10.0, bins=64, qs=(0.5, 0.99)),
+        })
+        n_served = sum(
+            int(jax.jit(engine.simulate)(r).n_finished) for r in rows)
+        assert int(np.asarray(out["ttft"]["counts"]).sum()) == n_served
+
+
+# ---------------------------------------------------------------------------
+# serving-off inertness
+# ---------------------------------------------------------------------------
+
+class TestServingOffInert:
+    def test_fig4_reports_sentinels_and_analytic_times(self):
+        scn = fig4_scenario(SPACE_SHARED, SPACE_SHARED)
+        res = jax.jit(engine.simulate)(scn)
+        # legacy semantics untouched: the paper's Figure-4a analytic times
+        L = 400.0
+        np.testing.assert_allclose(
+            np.sort(np.asarray(res.finish_t)),
+            np.sort(np.asarray([L, L, 2 * L, 2 * L,
+                                3 * L, 3 * L, 4 * L, 4 * L])))
+        for f in ("ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99"):
+            assert float(getattr(res, f)) >= INF / 2
+
+    def test_no_serving_state_ever_set(self):
+        scn = fig4_scenario(SPACE_SHARED, SPACE_SHARED)
+        probe = KVProbe()
+        _, out = jax.jit(
+            lambda s: engine.simulate_instrumented(s, (probe,)),
+        )(scn)
+        assert float(out["kvprobe"]["rollback"]) == 0.0
+        assert float(out["kvprobe"]["pool_over"]) <= 0.0
+        assert float(out["kvprobe"]["host_over"]) <= 0.0
